@@ -1,0 +1,36 @@
+"""Reproduce the paper's Fig. 8: three 16 kb ACIM layouts at different
+design specifications, end-to-end (netlist -> place -> route -> DRC ->
+GDS-like JSON).
+
+  PYTHONPATH=src python examples/layout_flow.py
+"""
+import pathlib
+
+from repro.core.acim_spec import MacroSpec
+from repro.eda.flow import generate_layout
+
+# (spec, paper TOPS, paper F^2/bit) — see benchmarks/fig8_layouts.py
+PAPER = {
+    "a": (MacroSpec(128, 128, 2, 3), 3.277, 4504.0),
+    "b": (MacroSpec(512, 32, 8, 3), 0.813, 2610.0),
+    "c": (MacroSpec(256, 64, 8, 3), 0.813, 2977.0),
+}
+
+OUT = pathlib.Path("runs/fig8")
+
+
+def main() -> None:
+    OUT.mkdir(parents=True, exist_ok=True)
+    for tag, (spec, paper_tops, paper_area) in PAPER.items():
+        lr = generate_layout(spec)
+        m = lr.metrics()
+        lr.to_json(OUT / f"fig8_{tag}.json")
+        print(f"({tag}) H={spec.h} W={spec.w} L={spec.l} B={spec.b_adc}: "
+              f"layout {m['layout_area_f2_per_bit']:.0f} F^2/bit "
+              f"(paper {paper_area:.0f}), routed {m['routed_nets']} nets, "
+              f"DRC clean={m['drc_clean']}, {m['elapsed_s']:.1f}s")
+    print(f"layout JSONs in {OUT}/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""EasyACIM quickstart: explore -> agile-filter -> layout, in one minute.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import pathlib
+
+from repro.core import explorer
+from repro.eda.flow import generate_layout
+
+OUT = pathlib.Path("runs/quickstart")
+
+
+def main() -> None:
+    OUT.mkdir(parents=True, exist_ok=True)
+
+    print("== 1. MOGA design-space exploration (16 kb array) ==")
+    res = explorer.explore(16384, pop_size=192, generations=60)
+    print(f"Pareto-frontier set: {len(res)} solutions")
+    for row in sorted(res.to_rows(), key=lambda r: -r["tops"])[:5]:
+        print(f"  H={row['h']:4d} W={row['w']:4d} L={row['l']:2d} "
+              f"B={row['b_adc']} | {row['tops']:.3f} TOPS, "
+              f"{row['tops_per_w']:.0f} TOPS/W, "
+              f"{row['area_f2_per_bit']:.0f} F^2/bit, "
+              f"SNR {row['snr_db']:.1f} dB")
+
+    print("\n== 2. Agile user distillation (throughput >= 1 TOPS) ==")
+    filt = res.filter(min_tops=1.0)
+    print(f"{len(filt)} solutions survive")
+    spec = filt.best("tops_per_w") if len(filt) else res.best("tops")
+    print(f"selected: {spec}")
+
+    print("\n== 3. Template-based layout generation ==")
+    lr = generate_layout(spec)
+    m = lr.metrics()
+    print(f"layout: {m['layout_area_f2_per_bit']:.0f} F^2/bit "
+          f"(model {m['estimator_area_f2_per_bit']:.0f}), "
+          f"{m['routed_nets']} nets routed "
+          f"({100 * m['route_success']:.0f}%), DRC clean={m['drc_clean']}, "
+          f"{m['elapsed_s']:.1f}s")
+    lr.to_json(OUT / "layout.json")
+    res.to_json(OUT / "pareto.json")
+    print(f"artifacts in {OUT}/")
+
+
+if __name__ == "__main__":
+    main()

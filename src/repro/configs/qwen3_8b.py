@@ -1,0 +1,21 @@
+"""qwen3-8b [dense]: 36L d_model=4096 32H (GQA kv=8) d_ff=12288
+vocab=151936 — qk_norm, GQA, no QKV bias.  [hf:Qwen/Qwen3-8B; hf]
+"""
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=12288, vocab=151936, head_dim=128,
+    norm="rmsnorm", act="silu", mlp_gated=True, qk_norm=True,
+    rope_theta=1e6,
+    source="hf:Qwen/Qwen3-8B; hf",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, name="qwen3-reduced",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=512,
+    head_dim=16,
+)

@@ -1,0 +1,42 @@
+"""Config registry: ``get(name)`` returns the exact assigned ArchConfig;
+``reduced(name)`` returns the same-family CPU smoke-test variant."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCH_IDS = (
+    "arctic_480b",
+    "deepseek_v2_lite_16b",
+    "xlstm_125m",
+    "qwen2_5_3b",
+    "codeqwen1_5_7b",
+    "granite_34b",
+    "qwen3_8b",
+    "whisper_large_v3",
+    "zamba2_2_7b",
+    "paligemma_3b",
+)
+
+ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def canonical(name: str) -> str:
+    name = name.replace("-", "_").replace(".", "_")
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return name
+
+
+def get(name: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def reduced(name: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.REDUCED
+
+
+def all_configs():
+    return {n: get(n) for n in ARCH_IDS}

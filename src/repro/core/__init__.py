@@ -1,0 +1,6 @@
+"""EasyACIM core: the paper's contribution (estimation model Eqs. 2-11,
+NSGA-II design-space explorer, ACIM numerics, codesign loop), in JAX."""
+from repro.core.acim_spec import MacroSpec, valid_spec
+from repro.core.constants import CAL28, CalibConstants
+
+__all__ = ["MacroSpec", "valid_spec", "CAL28", "CalibConstants"]

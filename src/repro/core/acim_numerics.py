@@ -1,0 +1,180 @@
+"""Behavioral numerics of the synthesizable ACIM macro (paper Sec. 3.1).
+
+This module defines the *semantics* of executing a GEMM on the generated
+macro, used three ways:
+  1. `repro.kernels.acim_matmul.ref` wraps `acim_matmul_ref` as the pure-jnp
+     oracle for the Pallas kernel;
+  2. `repro.quant.cim_linear` routes model projections through it for
+     hardware-in-the-loop training/eval (quantization + analog noise);
+  3. `tests/test_acim_numerics.py` Monte-Carlo-validates the analytical SNR
+     model (Eqs. 2-6) against this simulation — the two halves of the paper
+     check each other.
+
+Compute model (QR, Fig. 2(c) / Fig. 6):
+  * Weights are stored bit-serially in the 8T array; activations are applied
+    as RWL pulses.  The paper's silicon results are 1b x 1b; multi-bit
+    operands are handled bit-serially with digital shift-add (ops layer).
+  * One ADC conversion digitizes the charge-redistributed average of
+    N = H/L products.  In sum units the ADC input is s = sum_k x_k*w_k in
+    [-N, N]; the B-bit mid-tread SAR quantizer has step delta = 2N/2^B —
+    which reproduces Eq. 6's SQNR_y exactly (see tests).
+  * Analog non-idealities (Eq. 5): static capacitor mismatch (a per-instance
+    draw — the same hardware always errs the same way), kT/C thermal noise
+    per conversion, charge injection ~ 0 (bottom-plate sampling).
+  * K > N is tiled into ceil(K/N) chunks; inter-chunk accumulation is
+    digital (exact), as in the real macro's output accumulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.acim_spec import MacroSpec
+from repro.core.constants import CAL28, CalibConstants
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseParams:
+    """Per-element (per 1b-product) relative noise std-devs, from Eq. 5."""
+
+    mismatch_rel: float   # sigma(dC/C) = kappa / sqrt(C0_fF): static
+    thermal_rel: float    # sqrt(2 kT / C0) / Vdd: per conversion
+    prefactor: float      # (2/3)(1 - 4^-Bw) bit-weighting factor
+
+    @staticmethod
+    def from_cal(cal: CalibConstants = CAL28) -> "NoiseParams":
+        c0_f = cal.c0_ff * 1e-15
+        return NoiseParams(
+            mismatch_rel=cal.kappa / float(np.sqrt(cal.c0_ff)),
+            thermal_rel=float(np.sqrt(2.0 * cal.kt / c0_f)) / cal.v_dd,
+            prefactor=(2.0 / 3.0) * (1.0 - 4.0 ** (-cal.b_w)),
+        )
+
+
+def adc_quantize_sum(s: Array, n: int, b_adc: int) -> Array:
+    """B-bit mid-tread SAR quantization of a sum in [-N, N].
+
+    delta = 2N / 2^B; codes clipped to [-(2^(B-1)), 2^(B-1) - 1] like a real
+    two's-complement SAR register.  Returns the *dequantized* sum (float).
+    """
+    delta = 2.0 * n / (2.0**b_adc)
+    code = jnp.round(s / delta)
+    code = jnp.clip(code, -(2.0 ** (b_adc - 1)), 2.0 ** (b_adc - 1) - 1.0)
+    return code * delta
+
+
+def _pad_k(x: Array, w: Array, n: int):
+    """Zero-pad the contraction dim to a multiple of the chunk size N.
+
+    Zero-padding is what the hardware does: unused rows of the local array
+    keep their caps at V_CM and contribute no charge.
+    """
+    k = x.shape[-1]
+    k_pad = (-k) % n
+    if k_pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, k_pad)])
+        w = jnp.pad(w, [(0, k_pad), (0, 0)])
+    return x, w, (k + k_pad) // n
+
+
+def acim_matmul_ref(x: Array, w: Array, spec: MacroSpec, *,
+                    noise: NoiseParams | None = None,
+                    instance_key: Array | None = None,
+                    conversion_key: Array | None = None) -> Array:
+    """Simulate y = x @ w on the macro.  x: (..., K) in {-1, +1} (or any
+    bounded analog value |x|<=1 — the RWL pulse width); w: (K, C) in
+    {-1, +1}.  Returns (..., C) float32.
+
+    With `noise=None` the path is deterministic (ideal caps) and bit-exact
+    against the Pallas kernel.  With noise, `instance_key` draws the static
+    per-(chunk-position, column) capacitor mismatch and `conversion_key` the
+    per-conversion thermal noise.
+    """
+    n, b = spec.n_caps, spec.b_adc
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    x, w, n_chunks = _pad_k(x, w, n)
+    cols = w.shape[-1]
+    xc = x.reshape(x.shape[:-1] + (n_chunks, n))
+    wc = w.reshape(n_chunks, n, cols)
+
+    # partial sums per chunk: (..., n_chunks, cols)
+    s = jnp.einsum("...ck,ckj->...cj", xc, wc)
+
+    if noise is not None:
+        if instance_key is None or conversion_key is None:
+            raise ValueError("noisy simulation needs instance_key and conversion_key")
+        # static mismatch: eps per (chunk, k, col) cap; error = sum_k q_k eps_k.
+        # E[q^2] = E[x^2 w^2] <= 1; we inject with the actual products to stay
+        # faithful: err_mismatch = einsum(q, eps).
+        eps = noise.mismatch_rel * jax.random.normal(
+            instance_key, (n_chunks, n, cols), jnp.float32)
+        q = xc[..., None] * wc  # (..., c, k, j) products — memory heavy for
+        # large tiles; ref oracle only (kernel fuses this).
+        err_mm = jnp.sum(q * eps, axis=-2)
+        sigma_th = noise.thermal_rel * float(np.sqrt(n))  # sum-referred kT/C
+        err_th = sigma_th * jax.random.normal(conversion_key, s.shape, jnp.float32)
+        pref = float(np.sqrt(noise.prefactor))
+        s = s + pref * (err_mm + err_th)
+
+    y_hat = adc_quantize_sum(s, n, b)
+    return jnp.sum(y_hat, axis=-2)
+
+
+def acim_matmul_multibit_ref(x_int: Array, w_int: Array, spec: MacroSpec,
+                             b_x: int, b_w: int) -> Array:
+    """Bit-serial multi-bit GEMM on the macro (digital shift-add of 1b planes).
+
+    x_int: (..., K) signed ints in [-2^(bx-1), 2^(bx-1)-1]; w_int likewise.
+
+    Bipolar recoding keeps every plane in the macro's native {-1,+1} domain:
+    with offset-binary bits u_i of (v + 2^(b-1)) and p_i = 2*u_i - 1,
+        v = sum_i p_i 2^(i-1) - 1/2 .
+    Expanding x.w therefore gives
+        y = sum_ij 2^(i+j-2) <px_i, pw_j>  - (sum_x + sum_w)/2 - K/4 ,
+    where the cross terms <px_i, pw_j> run on the macro (ADC-quantized) and
+    the rank-1 corrections are exact digital arithmetic (weight sums are
+    known at compile time; activation sums are a digital popcount — standard
+    practice in bit-serial CIM schedules).
+    """
+    def planes(v, bits):
+        u = v.astype(jnp.int32) + 2 ** (bits - 1)           # offset binary
+        return [(((u >> i) & 1) * 2 - 1).astype(jnp.float32) for i in range(bits)]
+
+    xs = planes(x_int, b_x)
+    ws = planes(w_int, b_w)
+    k = x_int.shape[-1]
+
+    total = 0.0
+    for i, px in enumerate(xs):
+        for j, pw in enumerate(ws):
+            total = total + 2.0 ** (i + j - 2) * acim_matmul_ref(px, pw, spec)
+    sum_x = jnp.sum(x_int.astype(jnp.float32), axis=-1, keepdims=True)
+    sum_w = jnp.sum(w_int.astype(jnp.float32), axis=0, keepdims=True)
+    return total - 0.5 * sum_x - 0.5 * sum_w - k / 4.0
+
+
+def quantize_symmetric(x: Array, bits: int):
+    """Per-tensor symmetric quantization to signed `bits` ints (QAT-style)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    scale = amax / (2.0 ** (bits - 1) - 1.0)
+    q = jnp.clip(jnp.round(x / scale), -(2.0 ** (bits - 1)), 2.0 ** (bits - 1) - 1.0)
+    return q.astype(jnp.int32), scale
+
+
+def binarize(x: Array):
+    """Sign binarization with per-tensor scale (1b weights/activations)."""
+    scale = jnp.mean(jnp.abs(x)) + 1e-8
+    return jnp.where(x >= 0, 1.0, -1.0).astype(jnp.float32), scale
+
+
+def expected_snr_db(spec: MacroSpec, cal: CalibConstants = CAL28) -> float:
+    from repro.core import estimator
+
+    return float(estimator.snr_total_db(spec.h, spec.l, spec.b_adc, cal))

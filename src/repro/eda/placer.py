@@ -1,0 +1,157 @@
+"""Template-based hierarchical placer (paper Sec. 3.3, Fig. 7).
+
+Bottom-up, per the paper: inside each hierarchy level only the child
+blocks are placed (their internals are opaque); the final macro layout
+composes pre-placed templates.
+
+  L0  local array:  L SRAM cells in a vertical strip + CAPLC alongside
+  L1  column:       H/L local arrays stacked; ADC periphery (switches,
+                    comparator, SAR logic, DFFs) at the column foot —
+                    the peripheral ORDER is optimized (exhaustive/greedy
+                    HPWL over the RBL/SAR nets, standing in for the
+                    grid-based optimization of [25-27])
+  L2  macro:        W columns abutted; row drivers on the left edge
+
+Every placement is returned as absolute rectangles on the F grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.core.acim_spec import MacroSpec
+from repro.eda.cells import Cell, library
+
+
+@dataclasses.dataclass(frozen=True)
+class Placed:
+    name: str
+    cell: str
+    x: int
+    y: int
+    w: int
+    h: int
+
+    @property
+    def cx(self) -> float:
+        return self.x + self.w / 2
+
+    @property
+    def cy(self) -> float:
+        return self.y + self.h / 2
+
+
+@dataclasses.dataclass
+class Placement:
+    spec: MacroSpec
+    rects: list[Placed]
+    width: int
+    height: int
+
+    @property
+    def area_f2(self) -> int:
+        return self.width * self.height
+
+    def area_f2_per_bit(self) -> float:
+        return self.area_f2 / self.spec.array_size
+
+
+def _local_array_template(lib: dict[str, Cell], l: int):
+    """L SRAM cells stacked + cap beside; returns (rects, w, h)."""
+    s = lib["SRAM8T"]
+    c = lib["CAPLC"]
+    h = max(l * s.height, c.height)
+    rects = [("s%d" % k, "SRAM8T", 0, k * s.height) for k in range(l)]
+    rects.append(("cap", "CAPLC", s.width, (h - c.height) // 2))
+    return rects, s.width + c.width, h
+
+
+def _periph_order(lib: dict[str, Cell], spec: MacroSpec) -> list[str]:
+    """Order the column periphery to minimize RBL/SAR-bus HPWL.
+
+    The RBL enters from the top (array side): switches must sit nearest,
+    then comparator, SAR logic, DFF chain.  We search all orders of the 4
+    kinds (4! = 24) and keep the HPWL-minimal one — a miniature of the
+    paper's grid-based placement optimization, with the interconnection
+    model: RBL touches SW+COMP from the top; CMP->SAR; SAR->DFFs.
+    """
+    kinds = ["RBLSW", "COMP", "SARLOGIC", "DFF"]
+    best, best_cost = None, None
+    for order in itertools.permutations(kinds):
+        y, pos = 0, {}
+        for k in order:
+            pos[k] = y
+            y += lib[k].height
+        # HPWL of: RBL (top=0 to SW and COMP), COMP->SAR, SAR->DFF
+        cost = (pos["RBLSW"] + lib["RBLSW"].height
+                + pos["COMP"] + lib["COMP"].height
+                + abs(pos["COMP"] - pos["SARLOGIC"])
+                + abs(pos["SARLOGIC"] - pos["DFF"]))
+        if best_cost is None or cost < best_cost:
+            best, best_cost = order, cost
+    return list(best)
+
+
+def place(spec: MacroSpec) -> Placement:
+    """Pitch-matched composition: the column periphery (switches,
+    comparator+SAR, DFFs) is reshaped to the array column width — the
+    standard CIM pitch-matching discipline; Eq. 10's A_COMP/H amortization
+    is exactly this geometry."""
+    lib = library()
+    la_rects, la_w, la_h = _local_array_template(lib, spec.l)
+    n_la = spec.n_caps
+    order = _periph_order(lib, spec)
+
+    rects: list[Placed] = []
+    col_w = la_w
+    array_h = n_la * la_h
+
+    def pitch_h(kind: str, count: int = 1) -> int:
+        """height of `count` cells of `kind` reshaped to the column pitch."""
+        return max(1, (lib[kind].area * count + col_w - 1) // col_w)
+
+    n_sw = len(spec.sar_groups()) - 1
+    periph_y, y = {}, 0
+    counts = {"RBLSW": n_sw, "COMP": 1, "SARLOGIC": 1, "DFF": spec.b_adc}
+    for k in order:
+        periph_y[k] = y
+        y += counts[k] * pitch_h(k) + 1
+    periph_h = y
+
+    for j in range(spec.w):
+        x0 = j * col_w
+        for i in range(n_la):
+            y0 = i * la_h
+            for name, cellk, dx, dy in la_rects:
+                c = lib[cellk]
+                rects.append(Placed(f"c{j}_la{i}_{name}", cellk,
+                                    x0 + dx, y0 + dy, c.width, c.height))
+        ybase = array_h
+        for g in range(n_sw):
+            rects.append(Placed(f"c{j}_sw{g}", "RBLSW", x0,
+                                ybase + periph_y["RBLSW"] + g * pitch_h("RBLSW"),
+                                col_w, pitch_h("RBLSW")))
+        rects.append(Placed(f"c{j}_comp", "COMP", x0,
+                            ybase + periph_y["COMP"], col_w, pitch_h("COMP")))
+        rects.append(Placed(f"c{j}_sar", "SARLOGIC", x0,
+                            ybase + periph_y["SARLOGIC"], col_w,
+                            pitch_h("SARLOGIC")))
+        for b in range(spec.b_adc):
+            rects.append(Placed(f"c{j}_dff{b}", "DFF", x0,
+                                ybase + periph_y["DFF"] + b * pitch_h("DFF"),
+                                col_w, pitch_h("DFF")))
+
+    # row drivers on the left edge
+    drv = lib["ROWDRV"]
+    for r in range(min(spec.h, 64)):
+        rects.append(Placed(f"rd{r}", "ROWDRV", 0,
+                            r * max(la_h // max(spec.l, 1), drv.height),
+                            drv.width, drv.height))
+
+    total_h = array_h + periph_h
+    total_w = spec.w * col_w + drv.width + 2
+    # shift columns right of the driver strip
+    rects = [Placed(r.name, r.cell, r.x + drv.width + 2 if not
+                    r.name.startswith("rd") else r.x, r.y, r.w, r.h)
+             for r in rects]
+    return Placement(spec, rects, total_w, total_h)

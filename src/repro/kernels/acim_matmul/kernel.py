@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: bit-serial QR ACIM matmul with in-loop SAR ADC.
+
+Hardware adaptation (paper -> TPU): one macro conversion digitizes the
+charge-redistributed average of N = H/L 1b products per column.  On TPU we
+map each conversion group to an (bm x N) @ (N x bn) MXU matmul followed by
+the ADC transfer function (round/clip — VPU ops) and digital accumulation in
+a VMEM f32 scratch accumulator, exactly mirroring the macro's
+chunked-analog / exact-digital split:
+
+    HBM  x:(M,K) w:(K,C)  --BlockSpec-->  VMEM tiles (bm, bk), (bk, bn)
+    for each of bk/N sub-chunks:  s = x_c @ w_c   (MXU)
+                                  acc += adc(s)   (VPU round+clip)
+    last k-step: out tile (bm, bn) <- acc
+
+Block shapes are multiples of the 128-lane MXU dims; N itself is a power of
+two (64..2048 for real macros), so sub-chunk matmuls stay MXU-aligned.
+Capacitor mismatch (Eq. 5, static) enters as a multiplicative weight
+perturbation and is folded into `w` by the ops layer — the kernel itself is
+deterministic and bit-exact against `ref.acim_matmul_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _adc(s: jax.Array, n: int, b_adc: int) -> jax.Array:
+    """B-bit mid-tread SAR quantization of a sum in [-N, N] (dequantized)."""
+    delta = 2.0 * n / (2.0 ** b_adc)
+    code = jnp.round(s * (1.0 / delta))
+    code = jnp.clip(code, -(2.0 ** (b_adc - 1)), 2.0 ** (b_adc - 1) - 1.0)
+    return code * delta
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n: int, b_adc: int, bk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    for c in range(bk // n):
+        xs = x[:, c * n:(c + 1) * n]
+        ws = w[c * n:(c + 1) * n, :]
+        s = jnp.dot(xs, ws, preferred_element_type=jnp.float32)
+        acc_ref[...] += _adc(s, n, b_adc)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "b_adc", "block_m", "block_n", "block_k", "interpret"))
+def acim_matmul_kernel(x: jax.Array, w: jax.Array, *, n: int, b_adc: int,
+                       block_m: int = 128, block_n: int = 128,
+                       block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """y[i,j] = sum over K-chunks of ADC(sum_{k in chunk} x[i,k] w[k,j]).
+
+    Preconditions (enforced by ops.acim_matmul, which pads):
+      M % block_m == 0, C % block_n == 0, K % block_k == 0, block_k % n == 0.
+    """
+    m, k = x.shape
+    k2, c = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % block_m == 0 and c % block_n == 0, (m, c, block_m, block_n)
+    assert k % block_k == 0 and block_k % n == 0, (k, block_k, n)
+
+    grid = (m // block_m, c // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, b_adc=b_adc, bk=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, l: (i, l)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))

@@ -1,0 +1,93 @@
+"""jit'd public wrapper for the ACIM matmul kernel.
+
+Handles shape padding (zero rows = caps held at V_CM, contributing no
+charge), static capacitor-mismatch folding (Eq. 5) as a multiplicative
+weight perturbation, backend selection (interpret mode off-TPU), and a
+straight-through-estimator custom VJP so the simulated macro can sit inside
+a training graph (`repro.quant.cim_linear`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.acim_numerics import NoiseParams
+from repro.core.acim_spec import MacroSpec
+from repro.kernels.acim_matmul.kernel import acim_matmul_kernel
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def mismatch_weights(w: jax.Array, spec: MacroSpec, instance_key: jax.Array,
+                     noise: NoiseParams) -> jax.Array:
+    """Fold the static per-cap mismatch into the weights: the QR error
+    sum_k q_k eps_k is exactly a matmul with w * (1 + sqrt(pref) * eps)."""
+    eps = jax.random.normal(instance_key, w.shape, jnp.float32)
+    return w * (1.0 + float(np.sqrt(noise.prefactor)) * noise.mismatch_rel * eps)
+
+
+def acim_matmul(x: jax.Array, w: jax.Array, spec: MacroSpec, *,
+                block_m: int = 128, block_n: int = 128, block_k: int | None = None,
+                interpret: bool | None = None) -> jax.Array:
+    """Simulated y = x @ w on the macro; x (..., K), w (K, C) in [-1, 1].
+
+    Bit-exact against `ref.acim_matmul_ref` for any shape (tests sweep
+    shapes/dtypes).  Leading x dims are flattened into M.
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    n, b_adc = spec.n_caps, spec.b_adc
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    c = w.shape[-1]
+    xm = x.reshape((-1, k)).astype(jnp.float32)
+    m = xm.shape[0]
+
+    if block_k is None:
+        block_k = max(n, min(512, 2 ** int(np.ceil(np.log2(max(k, 1))))))
+        block_k = max(n, (block_k // n) * n)
+    block_m_eff = min(block_m, max(8, 2 ** int(np.ceil(np.log2(max(m, 1))))))
+
+    xm = _pad_to(_pad_to(xm, 0, block_m_eff), 1, block_k)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, block_k), 1, block_n)
+    y = acim_matmul_kernel(xm, wp, n=n, b_adc=b_adc, block_m=block_m_eff,
+                           block_n=min(block_n, wp.shape[1]),
+                           block_k=block_k, interpret=interpret)
+    return y[:m, :c].reshape(lead + (c,))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def acim_matmul_ste(x: jax.Array, w: jax.Array, spec: MacroSpec,
+                    interpret: bool | None = None) -> jax.Array:
+    """ACIM matmul with a straight-through gradient (d y / d(x,w) of the
+    ideal matmul), the standard estimator for quantization-in-the-loop
+    training."""
+    return acim_matmul(x, w, spec, interpret=interpret)
+
+
+def _ste_fwd(x, w, spec, interpret):
+    return acim_matmul(x, w, spec, interpret=interpret), (x, w)
+
+
+def _ste_bwd(spec, interpret, res, g):
+    x, w = res
+    gx = jnp.einsum("...c,kc->...k", g, w)
+    gw = jnp.einsum("...k,...c->kc", x, g)
+    return gx, gw
+
+
+acim_matmul_ste.defvjp(_ste_fwd, _ste_bwd)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the acim_matmul Pallas kernel.
+
+Delegates to `repro.core.acim_numerics.acim_matmul_ref`, which is also the
+Monte-Carlo-validated behavioral model of the macro — kernel, oracle, and
+analytical SNR model (Eqs. 2-6) form a three-way consistency check exercised
+by the tests.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import acim_numerics
+from repro.core.acim_spec import MacroSpec
+
+
+def acim_matmul_ref(x: jax.Array, w: jax.Array, *, n: int, b_adc: int) -> jax.Array:
+    """Ideal (noiseless) ACIM GEMM; x (..., K), w (K, C)."""
+    h = n * 2  # any (h, l) with h/l == n is equivalent for the numerics
+    spec = MacroSpec(h=h, w=w.shape[-1], l=2, b_adc=b_adc)
+    return acim_numerics.acim_matmul_ref(x, w, spec)

@@ -1,0 +1,41 @@
+"""Public wrapper: GQA head broadcasting + padding + backend selection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, S, H, Dh); k/v: (B, T, KV, Dh) with H % KV == 0.
+
+    Returns (B, S, H, Dh).  KV heads are broadcast to H (GQA) and the
+    (B, H) axes fold into the kernel grid.
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    kx = jnp.repeat(k, g, axis=2)
+    vx = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    kf = kx.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    vf = vx.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    bq = min(block_q, s)
+    while s % bq:
+        bq //= 2
+    bk = min(block_k, t)
+    while t % bk:
+        bk //= 2
+    o = flash_attention_kernel(qf, kf, vf, block_q=bq, block_k=bk,
+                               causal=causal, interpret=interpret)
+    return o.reshape(b, h, s, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,4 @@
+from repro.kernels.pareto_dom.ops import dominance_matrix
+from repro.kernels.pareto_dom.ref import dominance_matrix_ref
+
+__all__ = ["dominance_matrix", "dominance_matrix_ref"]

@@ -1,0 +1,29 @@
+"""Public wrapper: pads the population to the tile size and strips it back.
+
+Pad rows are +inf in every objective: they dominate nothing and real points
+dominating them is irrelevant after slicing, so correctness is unaffected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pareto_dom.kernel import dominance_matrix_kernel
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def dominance_matrix(f: jax.Array, *, block: int = 256,
+                     interpret: bool | None = None) -> jax.Array:
+    """f: (P, M) objectives (minimization).  Returns (P, P) bool."""
+    if interpret is None:
+        interpret = _should_interpret()
+    p, m = f.shape
+    block = min(block, max(8, p))
+    pad = (-p) % block
+    if pad:
+        f = jnp.concatenate([f, jnp.full((pad, m), jnp.inf, f.dtype)], 0)
+    d = dominance_matrix_kernel(f.T, block=block, interpret=interpret)
+    return d[:p, :p].astype(jnp.bool_)

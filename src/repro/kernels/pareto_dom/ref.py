@@ -1,0 +1,4 @@
+"""Pure-jnp oracle for the pareto_dom kernel: `repro.core.pareto.dominance_matrix`."""
+from repro.core.pareto import dominance_matrix as dominance_matrix_ref
+
+__all__ = ["dominance_matrix_ref"]

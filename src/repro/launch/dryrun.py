@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this records (JSON cache in runs/dryrun/):
+  * compile success, wall time;
+  * memory_analysis(): per-device argument/output/temp bytes (proves fit);
+  * cost_analysis(): per-device HLO FLOPs and bytes accessed;
+  * collective bytes by op kind, parsed from compiled.as_text()
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+     collective-permute, including async -start forms);
+  * the roofline terms (compute / memory / collective, seconds) per the
+    brief's TPU v5e constants.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import registry as creg
+from repro.launch import shapes as shp
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.core.constants import TPU_HBM_BW, TPU_ICI_BW, TPU_PEAK_BF16_FLOPS
+
+RUNS = pathlib.Path(__file__).resolve().parents[3] / "runs" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?(?:\.\d+)?\s*=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\])")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"\"known_trip_count\":{\"n\":\"(\d+)\"}")
+_CALLEE_RE = re.compile(r"(?:calls=|to_apply=|body=|condition=)%?([\w.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> tuple[dict[str, list[str]], str]:
+    comps: dict[str, list[str]] = {}
+    name, buf, entry = None, [], None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if name is None and stripped.endswith("{") and ") -> " in stripped:
+            head = stripped.split("(", 1)[0].strip()
+            is_entry = head.startswith("ENTRY")
+            head = head.removeprefix("ENTRY").strip().lstrip("%")
+            name = head
+            if is_entry:
+                entry = name
+            buf = []
+            comps[name] = buf
+        elif name is not None:
+            if stripped == "}":
+                name = None
+            else:
+                buf.append(line)
+    return comps, entry or ""
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Collective bytes with while-loop trip-count multipliers.
+
+    XLA reports each while body once; per-layer collectives (TP psums, EP
+    all-to-alls) live inside the scan-over-layers body and must be scaled
+    by the trip count.  Trip counts come from the `known_trip_count`
+    backend_config XLA attaches to each while; the effective multiplier is
+    the product along the while-nesting path from ENTRY.  Async -start
+    lines are skipped (the -done carries the result shape).
+    """
+    comps, entry = _split_computations(hlo_text)
+
+    bytes_by_kind: dict[str, float] = {}
+    count: dict[str, int] = {}
+    visited: set[tuple[str, float]] = set()
+
+    def walk(name: str, mult: float) -> None:
+        if name not in comps or (name, mult) in visited:
+            return
+        visited.add((name, mult))
+        for line in comps[name]:
+            m = _COLL_RE.search(line)
+            if m and "-start" not in line.split("=")[0]:
+                kind, nbytes = m.group(1), _shape_bytes(m.group(2))
+                bytes_by_kind[kind] = bytes_by_kind.get(kind, 0.0) + nbytes * mult
+                count[kind] = count.get(kind, 0) + 1
+            if "while(" in line:
+                bm = _WHILE_BODY_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                if bm:
+                    walk(bm.group(1), mult * (int(tm.group(1)) if tm else 1))
+            else:
+                for callee in _CALLEE_RE.findall(line):
+                    if callee in comps and callee != name:
+                        walk(callee, mult)
+
+    walk(entry, 1.0)
+    return {"bytes": bytes_by_kind, "count": count,
+            "total_bytes": sum(bytes_by_kind.values())}
+
+
+def model_flops(cfg, shape: shp.ShapeSpec) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) per the brief; decode: D = batch
+    tokens per step."""
+    from repro.models.registry import count_params
+
+    n = count_params(cfg, active_only=cfg.moe is not None)
+    if shape.kind == "train":
+        d = shape.batch * shape.seq
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.batch * shape.seq
+        return 2.0 * n * d
+    return 2.0 * n * shape.batch        # decode: one token per sequence
+
+
+def analytic_terms(cfg, shape: shp.ShapeSpec, chips: int) -> dict:
+    from repro.launch.roofline_model import cell_cost
+
+    cost = cell_cost(cfg, shape)
+    return {
+        "flops_global": cost.flops,
+        "hbm_bytes_global": cost.hbm_bytes,
+        "compute_s": cost.flops / (chips * TPU_PEAK_BF16_FLOPS),
+        "memory_s": cost.hbm_bytes / (chips * TPU_HBM_BW),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             force: bool = False, variant: str = "") -> dict:
+    cfg = creg.get(arch)
+    shape = shp.SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    RUNS.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{variant}" if variant else ""
+    out_path = RUNS / (f"{creg.canonical(arch)}__{shape_name}__{mesh_name}"
+                       f"{suffix}.json")
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    ok, why = shp.applicable(cfg, shape)
+    rec = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind}
+    if not ok:
+        rec.update(status="skip", reason=why)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            kw = dict(microbatches=shp.microbatches_for(cfg, shape))
+            if variant == "perf":
+                kw.update(steps_mod.PERF_TRAIN_OVERRIDES.get(cfg.name, {}))
+            ts = steps_mod.make_train_step(cfg, mesh, **kw)
+            lowered = ts.fn.lower(ts.state_struct, ts.batch_struct)
+        elif shape.kind == "prefill":
+            ps = steps_mod.make_prefill_step(cfg, mesh, shape)
+            lowered = ps.fn.lower(ps.params_struct, ps.batch_struct)
+        else:
+            ss = steps_mod.make_serve_step(cfg, mesh, shape)
+            lowered = ss.fn.lower(ss.params_struct, ss.state_struct,
+                                  ss.tokens_struct)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    except Exception as e:  # noqa: BLE001 — failures are data here
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    coll_dev = coll["total_bytes"]      # per-device program, trip-corrected
+    ana = analytic_terms(cfg, shape, chips)
+    terms = {
+        "compute_s": ana["compute_s"],
+        "memory_s": ana["memory_s"],
+        "collective_s": coll_dev / TPU_ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    rec.update(
+        status="ok", chips=chips, lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory={
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "total_bytes": ma.argument_size_in_bytes + ma.temp_size_in_bytes,
+            "fits_16gb": bool(ma.argument_size_in_bytes
+                              + ma.temp_size_in_bytes < 16e9),
+        },
+        # raw HLO cost analysis (NOTE: while bodies counted once — see
+        # roofline_model.py docstring; analytic terms are authoritative)
+        cost={"flops_per_device_raw": flops_dev,
+              "bytes_per_device_raw": bytes_dev,
+              "transcendentals": float(ca.get("transcendentals", 0.0))},
+        analytic=ana,
+        collectives=coll,
+        roofline={**terms, "dominant": dominant,
+                  "model_flops_global": mf,
+                  "useful_flops_ratio": mf / max(ana["flops_global"], 1.0),
+                  "roofline_fraction": mf / max(ana["flops_global"], 1.0)
+                  * ana["compute_s"] / max(max(terms.values()), 1e-30)},
+        hlo_bytes=len(hlo),
+    )
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(shp.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 multi-pod mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="'perf' applies PERF_TRAIN_OVERRIDES; results get a "
+                         "__perf suffix")
+    args = ap.parse_args()
+
+    archs = creg.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(shp.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, force=args.force,
+                               variant=args.variant)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f"dom={r['dominant']:<13s} "
+                             f"comp={r['compute_s']:.3e}s "
+                             f"mem={r['memory_s']:.3e}s "
+                             f"coll={r['collective_s']:.3e}s "
+                             f"bytes/dev={rec['memory']['total_bytes']/1e9:.2f}GB "
+                             f"compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = rec["error"][:140]
+                else:
+                    extra = rec.get("reason", "")
+                print(f"{rec['arch']:22s} {rec['shape']:12s} {rec['mesh']:10s} "
+                      f"{status:5s} {extra}", flush=True)
+                rows.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_err = sum(r["status"] == "error" for r in rows)
+    n_skip = sum(r["status"] == "skip" for r in rows)
+    print(f"\n{n_ok} ok, {n_err} error, {n_skip} skip / {len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,318 @@
+"""Step builders: distributed train / prefill / decode steps for any
+(arch x shape x mesh) cell.
+
+Each builder returns (jitted_fn, in_shardings-consistent ShapeDtypeStruct
+trees) so the same code path serves the real trainer/server AND the
+multi-pod dry-run (`launch/dryrun.py` lowers with the struct trees; the
+trainer feeds real arrays with identical shardings).
+
+Logical activation rules are installed around tracing via
+`repro.parallel.axes.set_rules`, so `with_sharding_constraint`s bind to the
+target mesh; sequence (Megatron-style SP) is mapped to "model" for the
+attention families during training, and `qseq` for 32k prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch import shapes as shp
+from repro.models.registry import build_model
+from repro.optim import adamw
+from repro.parallel.axes import set_rules
+from repro.parallel.sharding import ShardingPolicy, make_policy
+
+PyTree = Any
+
+
+def _seq_parallel(cfg: ArchConfig) -> bool:
+    """Megatron-SP residual-stream sharding.  REFUTED hypothesis (see
+    EXPERIMENTS.md §Perf): under GSPMD the seq<->heads resharding at the
+    attention einsums triggers involuntary full rematerialization
+    (replicate-then-slice), exploding temp memory 8x.  Kept off; per-layer
+    activation pressure is handled by microbatching instead."""
+    return False
+
+
+def default_opt_cfg(cfg: ArchConfig) -> adamw.AdamWConfig:
+    """Per-arch optimizer memory policy: the 480B config needs int8
+    blockwise moments + FSDP to fit 16 GB/chip (see DESIGN.md §6)."""
+    if cfg.name == "arctic-480b":
+        return adamw.AdamWConfig(quantized_moments=True)
+    if cfg.name == "granite-34b":
+        return adamw.AdamWConfig(moment_dtype=jnp.bfloat16)
+    return adamw.AdamWConfig()
+
+
+# master-parameter dtype (bf16 for the 480B config: with int8 moments this
+# is what fits 16 GB/chip; stochastic-rounding caveat recorded in DESIGN.md)
+PARAM_DTYPE = {"arctic-480b": jnp.bfloat16}
+
+# per-arch logical-rule overrides for training
+ARCH_TRAIN_RULES = {
+    "arctic-480b": {"embed_carry": "model"},
+    "granite-34b": {"embed_carry": "model"},
+}
+
+# §Perf hillclimb variants (EXPERIMENTS.md): selected per-cell overrides.
+# The hypothesis->napkin-math->measure log lives in EXPERIMENTS.md §Perf.
+PERF_TRAIN_OVERRIDES = {
+    # it1: kill the FSDP regather-per-microbatch (mb 4 -> 1; the sharded
+    #      residual carry makes the larger per-mb activations fit)
+    # it2: padded merged heads 56->64 (sharding.py `padded_heads`) — always
+    #      on now via the default rules
+    # it3: bf16 parameter cast in loss -> bf16 grad collectives & gathers
+    "arctic-480b": dict(microbatches=1, cast_bf16=True),
+    # it1: mb 4 -> 1 (TP all-reduce volume /4); it2: ZeRO-3 model axis
+    "qwen2.5-3b": dict(microbatches=1, model_strategy="fsdp"),
+    # tiny model: TP is pure overhead -> ZeRO-3 + no accumulation
+    "xlstm-125m": dict(microbatches=1, model_strategy="fsdp"),
+    # rollout of the confirmed qwen2.5 recipe to the other <=3B archs
+    # (ZeRO-3 only viable while the hoisted bf16 layer stack fits: <=~3B)
+    "paligemma-3b": dict(microbatches=1, model_strategy="fsdp"),
+    "zamba2-2.7b": dict(microbatches=2, model_strategy="fsdp"),
+    "whisper-large-v3": dict(microbatches=1, model_strategy="fsdp"),
+}
+
+
+def accum_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.name == "arctic-480b" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TrainStep:
+    fn: Any                    # jitted (state, batch) -> (state, metrics)
+    state_struct: PyTree       # ShapeDtypeStructs with shardings
+    batch_struct: PyTree
+    policy: ShardingPolicy
+
+
+def make_train_state_struct(cfg: ArchConfig, policy: ShardingPolicy,
+                            opt_cfg: adamw.AdamWConfig):
+    api = build_model(cfg)
+    pshape = jax.eval_shape(api.init, jax.random.key(0))
+    pdt = PARAM_DTYPE.get(cfg.name)
+    if pdt is not None:
+        pshape = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, pdt if (s.dtype == jnp.float32 and s.ndim >= 2)
+                else s.dtype), pshape)
+    pshard = policy.param_shardings(pshape)
+    oshape = jax.eval_shape(functools.partial(adamw.init, cfg=opt_cfg), pshape)
+    if opt_cfg.quantized_moments:
+        # moments: {"q": like-param, "s": param minus last-dim sharding}
+        def qshard(sh):
+            spec = sh.spec
+            sspec = P(*(list(spec)[:-1] + [None])) if len(spec) else P()
+            return {"q": sh, "s": NamedSharding(policy.mesh, sspec)}
+
+        mshard = jax.tree.map(qshard, pshard,
+                              is_leaf=lambda x: isinstance(x, NamedSharding))
+        oshard = {"m": mshard, "v": mshard,
+                  "count": NamedSharding(policy.mesh, P())}
+    else:
+        oshard = {"m": pshard, "v": pshard,
+                  "count": NamedSharding(policy.mesh, P())}
+
+    def with_sh(tree, shtree):
+        return jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            tree, shtree)
+
+    state = {"params": with_sh(pshape, pshard),
+             "opt": with_sh(oshape, oshard),
+             "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                          sharding=NamedSharding(policy.mesh, P()))}
+    return state, {"params": pshard, "opt": oshard,
+                   "step": NamedSharding(policy.mesh, P())}
+
+
+def make_train_step(cfg: ArchConfig, mesh, *, opt_cfg: adamw.AdamWConfig | None = None,
+                    microbatches: int = 1, remat: bool = True,
+                    fsdp: bool | None = None, model_strategy: str = "tp",
+                    cast_bf16: bool = False,
+                    extra_rules: dict | None = None) -> TrainStep:
+    opt_cfg = opt_cfg or default_opt_cfg(cfg)
+    policy = make_policy(mesh, cfg, fsdp=fsdp, model_strategy=model_strategy)
+    api = build_model(cfg, remat=remat, mlstm_chunked=(cfg.family == "ssm"))
+    rules = policy.activation_rules()
+    if _seq_parallel(cfg):
+        rules["seq"] = policy.tp
+    rules.update(ARCH_TRAIN_RULES.get(cfg.name, {}))
+    if extra_rules:
+        rules.update(extra_rules)
+
+    state_struct, state_shard = make_train_state_struct(cfg, policy, opt_cfg)
+
+    def train_step(state, batch):
+        with set_rules(mesh, rules):
+            def loss_fn(params, mb):
+                if policy.compute_dtype_cast or cast_bf16:
+                    params = jax.tree.map(
+                        lambda p: p.astype(jnp.bfloat16)
+                        if (p.ndim >= 2 and p.dtype == jnp.float32) else p,
+                        params)
+                loss, metrics = api.loss(params, mb)
+                return loss, metrics
+
+            if microbatches == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state["params"], batch)
+            else:
+                mb_batch = jax.tree.map(
+                    lambda a: a.reshape((microbatches, a.shape[0] // microbatches)
+                                        + a.shape[1:]), batch)
+
+                acc_dt = accum_dtype(cfg)
+
+                def mb_step(carry, mb):
+                    gacc, lacc = carry
+                    (loss, metrics), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(state["params"], mb)
+                    gacc = jax.tree.map(
+                        lambda a, b: a + b.astype(acc_dt), gacc, g)
+                    return (gacc, lacc + loss), metrics
+
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt),
+                                  state["params"])
+                (grads, loss), mstack = jax.lax.scan(mb_step, (g0, 0.0), mb_batch)
+                grads = jax.tree.map(lambda g: g / microbatches, grads)
+                loss = loss / microbatches
+                metrics = jax.tree.map(lambda a: a[-1], mstack)
+
+            new_p, new_opt, opt_metrics = adamw.update(
+                grads, state["opt"], state["params"], opt_cfg)
+            metrics = dict(metrics, **opt_metrics, loss=loss)
+            new_state = {"params": new_p, "opt": new_opt,
+                         "step": state["step"] + 1}
+            return new_state, metrics
+
+    bstruct = shp.batch_struct(cfg, shp.SHAPES["train_4k"])
+    bshard = policy.batch_specs(bstruct)
+    bstruct = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        bstruct, bshard)
+
+    fn = jax.jit(train_step,
+                 in_shardings=(state_shard, bshard),
+                 out_shardings=(state_shard, None),
+                 donate_argnums=(0,))
+    return TrainStep(fn=fn, state_struct=state_struct, batch_struct=bstruct,
+                     policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# prefill (forward-only logits)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PrefillStep:
+    fn: Any
+    params_struct: PyTree
+    batch_struct: PyTree
+    policy: ShardingPolicy
+
+
+def _to_serving_dtype(pshape):
+    """Serving holds weights in bf16 (halves HBM; matmuls run bf16 anyway)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 and s.ndim >= 2
+            else s.dtype), pshape)
+
+
+def make_prefill_step(cfg: ArchConfig, mesh, shape: shp.ShapeSpec,
+                      fsdp: bool | None = None) -> PrefillStep:
+    policy = make_policy(mesh, cfg, fsdp=fsdp)
+    # default rules: heads over "model" when divisible, else qseq (context
+    # parallel); blockwise attention bounds score memory either way.
+    rules = policy.activation_rules()
+    api = build_model(cfg)
+    pshape = _to_serving_dtype(jax.eval_shape(api.init, jax.random.key(0)))
+    pshard = policy.param_shardings(pshape)
+    pstruct = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        pshape, pshard)
+
+    from repro.models import lm, paligemma, whisper
+
+    def prefill(params, batch):
+        with set_rules(mesh, rules):
+            if cfg.family == "audio":
+                enc = whisper.encode(params, batch["frames"], cfg)
+                return whisper.decode_fwd(params, batch["inputs"], enc, cfg,
+                                          attn_impl="blockwise")
+            if cfg.family == "vlm":
+                hidden, _ = lm.lm_hidden(params, batch["inputs"], cfg,
+                                         prefix_embeds=batch["patches"],
+                                         attn_impl="blockwise")
+                return lm.lm_logits(params, hidden, cfg)
+            hidden, _ = lm.lm_hidden(params, batch["inputs"], cfg,
+                                     attn_impl="blockwise",
+                                     mlstm_chunked=(cfg.family == "ssm"))
+            return lm.lm_logits(params, hidden, cfg)
+
+    bstruct = shp.batch_struct(cfg, shape)
+    bstruct.pop("targets")
+    bshard = policy.batch_specs(bstruct)
+    bstruct = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        bstruct, bshard)
+    fn = jax.jit(prefill, in_shardings=(pshard, bshard))
+    return PrefillStep(fn=fn, params_struct=pstruct, batch_struct=bstruct,
+                       policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ServeStep:
+    fn: Any
+    params_struct: PyTree
+    state_struct: PyTree
+    tokens_struct: Any
+    policy: ShardingPolicy
+
+
+def make_serve_step(cfg: ArchConfig, mesh, shape: shp.ShapeSpec,
+                    fsdp: bool | None = None) -> ServeStep:
+    policy = make_policy(mesh, cfg, fsdp=fsdp)
+    rules = policy.activation_rules(decode_batch=shape.batch)
+    api = build_model(cfg)
+    pshape = _to_serving_dtype(jax.eval_shape(api.init, jax.random.key(0)))
+    pshard = policy.param_shardings(pshape)
+    sshape = jax.eval_shape(
+        functools.partial(api.init_decode_state, shape.batch, shape.seq))
+    sshard = policy.decode_state_specs(sshape, shape.batch)
+
+    def serve_step(params, state, tokens):
+        with set_rules(mesh, rules):
+            return api.decode_step(params, state, tokens)
+
+    batch_ax = rules["batch"]
+    tshard = NamedSharding(mesh, P(batch_ax))
+    tstruct = jax.ShapeDtypeStruct((shape.batch,), jnp.int32, sharding=tshard)
+
+    def with_sh(tree, shtree):
+        return jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            tree, shtree)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(pshard, sshard, tshard),
+                 out_shardings=(None, sshard),
+                 donate_argnums=(1,))
+    return ServeStep(fn=fn, params_struct=with_sh(pshape, pshard),
+                     state_struct=with_sh(sshape, sshard),
+                     tokens_struct=tstruct, policy=policy)

@@ -1,0 +1,331 @@
+"""Attention mixers: GQA/MQA/MHA (+bias, +qk_norm) and DeepSeek MLA.
+
+Each mixer provides `init_*`, a full-sequence forward (training / prefill)
+and a single-token decode step against a preallocated cache.  Shapes follow
+(B, S, H, Dh); caches are (B, KV, S_max, Dh) so the sequence axis can be
+sharded over the "model" mesh axis for long-context decode (flash-decoding
+style split-KV: GSPMD turns the softmax reductions into per-shard partials
+plus a small cross-shard combine).
+
+MLA decode uses the absorbed formulation (cache = compressed latent c_kv +
+shared rope key), which shrinks the 32k-decode cache by ~`n_heads *
+head_dim / (kv_lora + rope_dim)` vs a GQA cache — this is why
+deepseek-v2-lite's decode_32k cell is memory-cheap despite MHA-like heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MLAConfig
+from repro.models import common
+from repro.models.common import NEG_INF, apply_rope, dense_init
+from repro.parallel.axes import logical
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA / MHA
+# ---------------------------------------------------------------------------
+def init_attention(key: Array, cfg: ArchConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * dh)),
+        "wk": dense_init(ks[1], (d, kv * dh)),
+        "wv": dense_init(ks[2], (d, kv * dh)),
+        "wo": dense_init(ks[3], (h * dh, d)),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = common.init_rmsnorm(dh)
+        p["k_norm"] = common.init_rmsnorm(dh)
+    return p
+
+
+def _project_qkv(p: dict, x: Array, cfg: ArchConfig, positions: Array):
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kv, dh)
+    v = v.reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = common.rmsnorm(p["q_norm"], q)
+        k = common.rmsnorm(p["k_norm"], k)
+    if cfg.pos == "rope":
+        q = apply_rope(q.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+    q = logical(q, "batch", "qseq", "heads", "head_dim")
+    k = logical(k, "batch", "kvseq", "kv_heads", "head_dim")
+    v = logical(v, "batch", "kvseq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _padded_heads() -> int | None:
+    from repro.parallel.axes import current_rules
+
+    ctx = current_rules()
+    if ctx is None:
+        return None
+    return ctx[1].get("padded_heads")
+
+
+def attention_fwd(p: dict, x: Array, cfg: ArchConfig, *, mask: Array,
+                  positions: Array) -> Array:
+    """Full-sequence attention.  mask: (S, T) bool (True = attend).
+
+    When the sharding rules request `padded_heads` (head count not
+    divisible by TP, e.g. arctic's 56 on a 16-way axis), attention runs in
+    merged repeat-KV form with H zero-padded to the next TP multiple: the
+    +|pad|/H extra FLOPs buy a shardable head axis and eliminate GSPMD's
+    involuntary full rematerialization of the bwd score tensors.
+    """
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // kv
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    hp = _padded_heads()
+    if hp and hp > h:
+        rep = hp // kv
+        # pad per KV group so q head j maps to kv head j // rep
+        qg = q.reshape(b, s, kv, g, dh)
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, rep - g), (0, 0)))
+        qm = qg.reshape(b, s, hp, dh)
+        kx = jnp.repeat(k, rep, axis=2)
+        vx = jnp.repeat(v, rep, axis=2)
+        qm = logical(qm, "batch", "qseq", "merged_heads", "head_dim")
+        kx = logical(kx, "batch", "kvseq", "merged_heads", "head_dim")
+        vx = logical(vx, "batch", "kvseq", "merged_heads", "head_dim")
+        scores = jnp.einsum("bshd,bthd->bhst", qm, kx) / np.sqrt(dh)
+        scores = jnp.where(mask[None, None], scores.astype(jnp.float32), NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, vx)
+        out = out.reshape(b, s, kv, rep, dh)[:, :, :, :g, :].reshape(b, s, h * dh)
+        return out @ p["wo"].astype(x.dtype)
+    qg = q.reshape(b, s, kv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / np.sqrt(dh)
+    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v).reshape(b, s, h * dh)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def attention_fwd_blockwise(p: dict, x: Array, cfg: ArchConfig, *,
+                            positions: Array, kv_block: int = 1024,
+                            prefix_len: int = 0) -> Array:
+    """Flash-style online-softmax attention over KV blocks (pure JAX).
+
+    Never materializes the (S, S) score matrix — required for the 32k+
+    prefill shapes.  Mask: causal, plus bidirectional over the first
+    `prefix_len` positions (PaliGemma prefix-LM).  Forward path for
+    prefill/serving; the Pallas kernel (`repro.kernels.flash_attention`)
+    implements the same math for TPU with this as its oracle partner.
+    """
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // kv
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    return _blockwise_core(q.reshape(b, s, kv, g, dh), k, v,
+                           kv_block=kv_block, prefix_len=prefix_len,
+                           out_dtype=x.dtype) .reshape(b, s, h * dh) \
+        @ p["wo"].astype(x.dtype)
+
+
+def _blockwise_core(qg: Array, k: Array, v: Array, *, kv_block: int,
+                    prefix_len: int, out_dtype) -> Array:
+    """qg: (B,S,KV,G,Dh); k/v: (B,T,KV,Dh).  Returns (B,S,KV,G,Dh)."""
+    b, s, kvh, g, dh = qg.shape
+    t = k.shape[1]
+    kv_block = min(kv_block, t)
+    while t % kv_block:           # e.g. 32768 + 256 patches -> block 256
+        kv_block //= 2
+    nblk = t // kv_block
+    scale = 1.0 / np.sqrt(dh)
+    q_idx = jnp.arange(s)
+
+    kb = jnp.moveaxis(k.reshape(b, nblk, kv_block, kvh, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nblk, kv_block, kvh, dh), 1, 0)
+
+    def step(carry, inp):
+        acc, m, l = carry
+        jblk, kj, vj = inp
+        k_idx = jblk * kv_block + jnp.arange(kv_block)
+        mask = (k_idx[None, :] <= q_idx[:, None]) | (
+            (q_idx[:, None] < prefix_len) & (k_idx[None, :] < prefix_len))
+        sc = jnp.einsum("bskgd,btkd->bskgt", qg, kj) * scale
+        sc = jnp.where(mask[None, :, None, None, :], sc.astype(jnp.float32),
+                       NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p_ = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p_, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", p_.astype(qg.dtype), vj).astype(jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, s, kvh, g, dh), jnp.float32)
+    m0 = jnp.full((b, s, kvh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, kvh, g), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
+                                  (jnp.arange(nblk), kb, vb))
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(out_dtype)
+
+
+def mla_fwd_blockwise(p: dict, x: Array, cfg: ArchConfig, *,
+                      positions: Array, kv_block: int = 1024) -> Array:
+    """Blockwise MLA prefill via expansion to per-head keys
+    k' = [k_nope, k_rope(broadcast)], q' = [q_nope, q_rope]."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c = common.rmsnorm(p["kv_norm"], x @ p["w_dkv"].astype(x.dtype))
+    k_nope = (c @ p["w_uk"].astype(x.dtype)).reshape(b, s, h, m.nope_dim)
+    v = (c @ p["w_uv"].astype(x.dtype)).reshape(b, s, h, m.v_dim)
+    k_rope = apply_rope(x @ p["w_kr"].astype(x.dtype), positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], -1)[:, :, :, None, :]  # (B,S,H,1,dq)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (b, s, h, m.rope_dim))], -1)
+    # pad v to k's head dim so one blockwise core serves both reductions
+    dq = m.nope_dim + m.rope_dim
+    # scale inside core uses sqrt(dq) == MLA's 1/sqrt(nope+rope)  ✓
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dq - m.v_dim)))
+    out = _blockwise_core(q, k, vpad, kv_block=kv_block, prefix_len=0,
+                          out_dtype=x.dtype)
+    out = out[:, :, :, 0, : m.v_dim].reshape(b, s, h * m.v_dim)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    kv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (batch, kv, max_seq, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(p: dict, x_t: Array, cache: dict, pos: Array,
+                     cfg: ArchConfig) -> tuple[Array, dict]:
+    """One-token decode.  x_t: (B, D); cache k/v: (B, KV, S, Dh); pos: scalar.
+
+    The score/value reductions run over the cache sequence axis, which the
+    sharding policy may place on the "model" mesh axis (split-KV decode).
+    """
+    b, d = x_t.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // kv
+    x = x_t[:, None, :]
+    q, k, v = _project_qkv(p, x, cfg, jnp.full((1,), pos, jnp.int32))
+    # k[:, 0]: (B, KV, Dh) -> written at cache[:, :, pos, :]
+    k_cache = jax.lax.dynamic_update_index_in_dim(
+        cache["k"], k[:, 0].astype(cache["k"].dtype), pos, axis=2)
+    v_cache = jax.lax.dynamic_update_index_in_dim(
+        cache["v"], v[:, 0].astype(cache["v"].dtype), pos, axis=2)
+    qh = q[:, 0].reshape(b, kv, g, dh)
+    scores = jnp.einsum("bkgd,bktd->bkgt", qh, k_cache.astype(qh.dtype)) / np.sqrt(dh)
+    t = k_cache.shape[2]
+    valid = jnp.arange(t) <= pos
+    scores = jnp.where(valid[None, None, None], scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x_t.dtype)
+    out = jnp.einsum("bkgt,bktd->bkgd", probs, v_cache.astype(probs.dtype))
+    out = out.reshape(b, h * dh) @ p["wo"].astype(x_t.dtype)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed-KV latent attention, decoupled RoPE
+# ---------------------------------------------------------------------------
+def init_mla(key: Array, cfg: ArchConfig) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h * (m.nope_dim + m.rope_dim))),
+        "w_dkv": dense_init(ks[1], (d, m.kv_lora)),
+        "w_kr": dense_init(ks[2], (d, m.rope_dim)),
+        "kv_norm": common.init_rmsnorm(m.kv_lora),
+        "w_uk": dense_init(ks[3], (m.kv_lora, h * m.nope_dim)),
+        "w_uv": dense_init(ks[4], (m.kv_lora, h * m.v_dim)),
+        "wo": dense_init(ks[5], (h * m.v_dim, d)),
+    }
+
+
+def _mla_q(p: dict, x: Array, cfg: ArchConfig, positions: Array):
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, m.nope_dim + m.rope_dim)
+    q_nope, q_rope = q[..., : m.nope_dim], q[..., m.nope_dim:]
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+    return q_nope, q_rope
+
+
+def mla_fwd(p: dict, x: Array, cfg: ArchConfig, *, mask: Array,
+            positions: Array) -> Array:
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    scale = 1.0 / np.sqrt(m.nope_dim + m.rope_dim)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c = common.rmsnorm(p["kv_norm"], x @ p["w_dkv"].astype(x.dtype))
+    k_nope = (c @ p["w_uk"].astype(x.dtype)).reshape(b, s, h, m.nope_dim)
+    v = (c @ p["w_uv"].astype(x.dtype)).reshape(b, s, h, m.v_dim)
+    k_rope = apply_rope(x @ p["w_kr"].astype(x.dtype), positions, cfg.rope_theta)
+    scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+              + jnp.einsum("bshd,btd->bhst", q_rope, k_rope)) * scale
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(b, s, h * m.v_dim)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    m: MLAConfig = cfg.mla
+    return {"c_kv": jnp.zeros((batch, max_seq, m.kv_lora), dtype),
+            "k_rope": jnp.zeros((batch, max_seq, m.rope_dim), dtype)}
+
+
+def mla_decode(p: dict, x_t: Array, cache: dict, pos: Array,
+               cfg: ArchConfig) -> tuple[Array, dict]:
+    """Absorbed MLA decode: scores/value work entirely in the 512-d latent.
+
+    q_abs[b,h,c] = sum_d q_nope[b,h,d] * w_uk[c, h*d]  (absorb W_uk into q)
+    score[t]     = (q_abs . c_kv[t] + q_rope . k_rope[t]) * scale
+    out_latent   = sum_t p[t] c_kv[t];  out_h = out_latent @ W_uv_h
+    """
+    m: MLAConfig = cfg.mla
+    b, _ = x_t.shape
+    h = cfg.n_heads
+    scale = 1.0 / np.sqrt(m.nope_dim + m.rope_dim)
+    x = x_t[:, None, :]
+    posv = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg, posv)
+    c_t = common.rmsnorm(p["kv_norm"], x @ p["w_dkv"].astype(x.dtype))[:, 0]
+    kr_t = apply_rope(x @ p["w_kr"].astype(x.dtype), posv, cfg.rope_theta)[:, 0]
+    c_cache = jax.lax.dynamic_update_index_in_dim(
+        cache["c_kv"], c_t.astype(cache["c_kv"].dtype), pos, axis=1)
+    kr_cache = jax.lax.dynamic_update_index_in_dim(
+        cache["k_rope"], kr_t.astype(cache["k_rope"].dtype), pos, axis=1)
+    w_uk = p["w_uk"].astype(x_t.dtype).reshape(m.kv_lora, h, m.nope_dim)
+    q_abs = jnp.einsum("bhd,chd->bhc", q_nope[:, 0], w_uk)
+    scores = (jnp.einsum("bhc,btc->bht", q_abs, c_cache.astype(q_abs.dtype))
+              + jnp.einsum("bhd,btd->bht", q_rope[:, 0],
+                           kr_cache.astype(q_rope.dtype))) * scale
+    t = c_cache.shape[1]
+    valid = jnp.arange(t) <= pos
+    scores = jnp.where(valid[None, None], scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x_t.dtype)
+    out_lat = jnp.einsum("bht,btc->bhc", probs, c_cache.astype(probs.dtype))
+    w_uv = p["w_uv"].astype(x_t.dtype).reshape(m.kv_lora, h, m.v_dim)
+    out = jnp.einsum("bhc,chd->bhd", out_lat, w_uv).reshape(b, h * m.v_dim)
+    return out @ p["wo"].astype(x_t.dtype), {"c_kv": c_cache, "k_rope": kr_cache}

@@ -1,0 +1,158 @@
+"""Shared model building blocks: norms, RoPE, masks, losses, init.
+
+Pure-functional style: parameters are nested dicts of jax arrays; every
+block exposes `init_*` and an apply function.  Layer stacks store parameters
+with a leading (n_layers, ...) axis and run under `jax.lax.scan`, which keeps
+the HLO size O(1) in depth — essential for compiling 88-layer configs on the
+production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# dtype policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    params: Any = jnp.float32        # master params (optimizer works in this)
+    compute: Any = jnp.bfloat16      # activations / matmul inputs
+    accum: Any = jnp.float32         # softmax / norms / losses
+
+    def cast_in(self, x: Array) -> Array:
+        return x.astype(self.compute)
+
+
+DEFAULT_POLICY = DTypePolicy()
+
+# learned-position table size: covers the 32k prefill/decode shapes
+MAX_LEARNED_POS = 32768
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def dense_init(key: Array, shape: tuple[int, ...], in_axis: int = 0,
+               dtype=jnp.float32) -> Array:
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key: Array, shape: tuple[int, ...], dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def init_layernorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: dict, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def init_norm(d: int, kind: str) -> dict:
+    return init_rmsnorm(d) if kind == "rmsnorm" else init_layernorm(d)
+
+
+def apply_norm(p: dict, x: Array, kind: str) -> Array:
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., S, Dh) with positions (..., S) or (S,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                     # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> Array:
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * dim / d))
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# attention masks
+# ---------------------------------------------------------------------------
+NEG_INF = -1e9
+
+
+def causal_mask(s: int) -> Array:
+    return jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+
+def prefix_lm_mask(s: int, prefix_len: int) -> Array:
+    """Bidirectional over the first `prefix_len` positions, causal after
+    (PaliGemma-style image-prefix attention)."""
+    m = causal_mask(s)
+    pref = (jnp.arange(s)[None, :] < prefix_len) & (jnp.arange(s)[:, None] < prefix_len)
+    return m | pref
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy(logits: Array, labels: Array, *,
+                          z_loss: float = 1e-4) -> tuple[Array, dict]:
+    """Token-mean CE with optional z-loss (logit-norm regularizer used by
+    production LM stacks for bf16 stability).  logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    zl = z_loss * jnp.square(lse)
+    loss = jnp.mean(nll + zl)
+    metrics = {"nll": jnp.mean(nll), "z_loss": jnp.mean(zl),
+               "ppl_proxy": jnp.exp(jnp.minimum(jnp.mean(nll), 20.0))}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]

@@ -1,0 +1,375 @@
+"""Generic decoder-only LM assembled from an ArchConfig.
+
+Covers the dense (qwen2.5/codeqwen/granite/qwen3), MoE (arctic/deepseek+MLA),
+SSM (xlstm), and hybrid (zamba2) families.  Whisper (enc-dec) and PaliGemma
+(VLM prefix) build on the same blocks in their own modules.
+
+Layer stacks are parameter-stacked (leading n_layers axis) and run under
+`jax.lax.scan` so HLO size is depth-independent; MoE aux losses accumulate
+through the scan carry.  Decode steps scan over the same stacked params with
+per-layer cache slices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import common, mamba2, mlp, xlstm
+from repro.models.common import apply_norm, causal_mask, embed_init, init_norm
+from repro.parallel.axes import logical
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# block init / apply (one transformer layer)
+# ---------------------------------------------------------------------------
+def _init_block(key: Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict = {"ln1": init_norm(d, cfg.norm)}
+    if cfg.family == "ssm":       # xLSTM pair: (mLSTM, sLSTM)
+        p["mlstm"] = xlstm.init_mlstm(ks[0], cfg)
+        p["ln2"] = init_norm(d, cfg.norm)
+        p["slstm"] = xlstm.init_slstm(ks[1], cfg)
+        return p
+    if cfg.family == "hybrid":    # Zamba2 mamba layer
+        p["mamba"] = mamba2.init_mamba2(ks[0], cfg)
+        return p
+    # attention + ffn block
+    if cfg.mla is not None:
+        p["attn"] = attn.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = attn.init_attention(ks[0], cfg)
+    p["ln2"] = init_norm(d, cfg.norm)
+    if cfg.moe is not None:
+        p["ffn"] = mlp.init_moe(ks[1], d, cfg)
+    else:
+        p["ffn"] = mlp.init_mlp(ks[1], d, cfg.d_ff, cfg)
+    return p
+
+
+def _block_fwd(p: dict, x: Array, cfg: ArchConfig, *, mask: Array,
+               positions: Array, mlstm_chunked: bool = False,
+               attn_impl: str = "dense", prefix_len: int = 0) -> tuple[Array, Array]:
+    """Returns (y, aux_loss).  attn_impl: 'dense' | 'blockwise' (32k+ seqs)."""
+    aux = jnp.float32(0.0)
+    if cfg.family == "ssm":
+        h = apply_norm(p["ln1"], x, cfg.norm)
+        fwd = xlstm.mlstm_fwd_chunked if mlstm_chunked else xlstm.mlstm_fwd
+        x = x + fwd(p["mlstm"], h, cfg)
+        h = apply_norm(p["ln2"], x, cfg.norm)
+        x = x + xlstm.slstm_fwd(p["slstm"], h, cfg)
+        return x, aux
+    if cfg.family == "hybrid":
+        h = apply_norm(p["ln1"], x, cfg.norm)
+        x = x + mamba2.mamba2_fwd(p["mamba"], h, cfg)
+        return x, aux
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    if cfg.mla is not None:
+        if attn_impl == "blockwise":
+            a = attn.mla_fwd_blockwise(p["attn"], h, cfg, positions=positions)
+        else:
+            a = attn.mla_fwd(p["attn"], h, cfg, mask=mask, positions=positions)
+    elif attn_impl == "blockwise":
+        a = attn.attention_fwd_blockwise(p["attn"], h, cfg, positions=positions,
+                                         prefix_len=prefix_len)
+    else:
+        a = attn.attention_fwd(p["attn"], h, cfg, mask=mask, positions=positions)
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        y, aux = mlp.moe_fwd(p["ffn"], h, cfg)
+    else:
+        y = mlp.mlp_fwd(p["ffn"], h, cfg)
+    return x + y, aux
+
+
+# ---------------------------------------------------------------------------
+# shared-attention block (Zamba2)
+# ---------------------------------------------------------------------------
+def _zamba_attn_cfg(cfg: ArchConfig) -> ArchConfig:
+    import dataclasses
+
+    hy = cfg.hybrid
+    return dataclasses.replace(cfg, n_heads=hy.attn_heads,
+                               n_kv_heads=hy.attn_kv_heads, head_dim=0,
+                               attn_bias=False, qk_norm=False)
+
+
+def _init_shared_block(key: Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    acfg = _zamba_attn_cfg(cfg)
+    return {
+        "ln1": init_norm(d, cfg.norm),
+        "attn": attn.init_attention(ks[0], acfg),
+        "ln2": init_norm(d, cfg.norm),
+        "ffn": mlp.init_mlp(ks[1], d, cfg.hybrid.shared_ff, cfg),
+    }
+
+
+def _shared_block_fwd(p: dict, x: Array, cfg: ArchConfig, *, mask, positions,
+                      attn_impl: str = "dense"):
+    acfg = _zamba_attn_cfg(cfg)
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    if attn_impl == "blockwise":
+        a = attn.attention_fwd_blockwise(p["attn"], h, acfg, positions=positions)
+    else:
+        a = attn.attention_fwd(p["attn"], h, acfg, mask=mask, positions=positions)
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg.norm)
+    return x + mlp.mlp_fwd(p["ffn"], h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+def n_stacked_layers(cfg: ArchConfig) -> int:
+    if cfg.family == "ssm":
+        assert cfg.n_layers % 2 == 0
+        return cfg.n_layers // 2          # (mLSTM, sLSTM) pairs
+    return cfg.n_layers
+
+
+def init_lm(key: Array, cfg: ArchConfig) -> PyTree:
+    nl = n_stacked_layers(cfg)
+    k_emb, k_blocks, k_head, k_shared, k_pos = jax.random.split(key, 5)
+    block_keys = jax.random.split(k_blocks, nl)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(block_keys)
+    p = {
+        "emb": embed_init(k_emb, (cfg.vocab, cfg.d_model)),
+        "blocks": blocks,
+        "final_norm": init_norm(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = common.dense_init(k_head, (cfg.d_model, cfg.vocab))
+    if cfg.pos == "learned":
+        p["pos_emb"] = embed_init(k_pos, (common.MAX_LEARNED_POS, cfg.d_model))
+    if cfg.family == "hybrid":
+        p["shared"] = _init_shared_block(k_shared, cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+def lm_hidden(params: PyTree, tokens: Array, cfg: ArchConfig, *,
+              mask: Array | None = None, prefix_embeds: Array | None = None,
+              mlstm_chunked: bool = False, remat: bool = False,
+              attn_impl: str = "dense") -> tuple[Array, Array]:
+    """Embed -> blocks -> final norm.  Returns (hidden (B,S,D), aux_loss).
+
+    prefix_embeds (B, P, D): modality-stub embeddings prepended to the token
+    embeddings (PaliGemma patches); callers account for the longer sequence.
+    attn_impl='blockwise' never materializes (S,S) scores (32k+ prefill).
+    """
+    x = params["emb"][tokens].astype(jnp.bfloat16)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = prefix_embeds.shape[1]
+    x = logical(x, "batch", "seq", "embed")
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    if cfg.pos == "learned":
+        x = x + params["pos_emb"][:s].astype(x.dtype)[None]
+    if mask is None and attn_impl == "dense":
+        mask = causal_mask(s)
+
+    if cfg.family == "hybrid":
+        per = cfg.hybrid.shared_attn_every
+        nl = cfg.n_layers
+        assert nl % per == 0
+        n_groups = nl // per
+        blocks = params["blocks"]
+        # regroup stacked params: (nl, ...) -> (n_groups, per, ...)
+        grouped = jax.tree.map(lambda a: a.reshape((n_groups, per) + a.shape[1:]),
+                               blocks)
+        shared = params["shared"]
+
+        def group_step(carry, gparams):
+            x = carry
+            x = _shared_block_fwd(shared, x, cfg, mask=mask, positions=positions,
+                                  attn_impl=attn_impl)
+
+            def layer_step(xx, lp):
+                y, _ = _block_fwd(lp, xx, cfg, mask=mask, positions=positions)
+                return y, None
+
+            if remat:
+                layer_step = jax.checkpoint(layer_step)
+            x, _ = jax.lax.scan(layer_step, x, gparams)
+            return x, None
+
+        if remat:
+            group_step = jax.checkpoint(group_step)
+        x, _ = jax.lax.scan(group_step, x, grouped)
+        aux = jnp.float32(0.0)
+    else:
+        def layer_step(carry, lp):
+            x, aux = carry
+            y, a = _block_fwd(lp, x, cfg, mask=mask, positions=positions,
+                              mlstm_chunked=mlstm_chunked, attn_impl=attn_impl,
+                              prefix_len=prefix_len)
+            # optional sharded residual carry ("embed_carry" -> "model"):
+            # remat then stores per-layer activations 1/TP-sized (arctic)
+            y = logical(y, "batch", "seq", "embed_carry")
+            return (y, aux + a), None
+
+        if remat:
+            layer_step = jax.checkpoint(layer_step)
+        (x, aux), _ = jax.lax.scan(layer_step, (x, jnp.float32(0.0)),
+                                   params["blocks"])
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def lm_logits(params: PyTree, hidden: Array, cfg: ArchConfig) -> Array:
+    head = params["emb"].T if cfg.tie_embeddings else params["head"]
+    logits = hidden @ head.astype(hidden.dtype)
+    # "logits_seq" (default None) keeps vocab as the sharded dim: the CE
+    # logsumexp then reduces over "model" with tiny (B,S) collectives.
+    if logits.ndim == 2:            # decode: (B, V)
+        return logical(logits, "batch", "vocab")
+    return logical(logits, "batch", "logits_seq", "vocab")
+
+
+def lm_loss(params: PyTree, batch: dict, cfg: ArchConfig, *,
+            mlstm_chunked: bool = False, remat: bool = False) -> tuple[Array, dict]:
+    hidden, aux = lm_hidden(params, batch["inputs"], cfg,
+                            mlstm_chunked=mlstm_chunked, remat=remat)
+    logits = lm_logits(params, hidden, cfg)
+    loss, metrics = common.softmax_cross_entropy(logits, batch["targets"])
+    metrics["aux_loss"] = aux
+    return loss + aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def _init_layer_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    if cfg.family == "ssm":
+        return {"mlstm": xlstm.init_mlstm_state(cfg, batch),
+                "slstm": xlstm.init_slstm_state(cfg, batch)}
+    if cfg.family == "hybrid":
+        return mamba2.init_mamba2_state(cfg, batch)
+    if cfg.mla is not None:
+        return attn.init_mla_cache(cfg, batch, max_seq)
+    return attn.init_kv_cache(cfg, batch, max_seq)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int) -> PyTree:
+    nl = n_stacked_layers(cfg)
+    one = _init_layer_cache(cfg, batch, max_seq)
+    caches = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (nl,) + a.shape), one)
+    state = {"caches": caches, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.hybrid.shared_attn_every
+        acfg = _zamba_attn_cfg(cfg)
+        sc = attn.init_kv_cache(acfg, batch, max_seq)
+        state["shared_caches"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), sc)
+    return state
+
+
+def _layer_decode(p: dict, x_t: Array, cache: PyTree, pos: Array,
+                  cfg: ArchConfig) -> tuple[Array, PyTree]:
+    if cfg.family == "ssm":
+        h = apply_norm(p["ln1"], x_t[:, None], cfg.norm)[:, 0]
+        y, mc = xlstm.mlstm_decode(p["mlstm"], h, cache["mlstm"], cfg)
+        x_t = x_t + y
+        h = apply_norm(p["ln2"], x_t[:, None], cfg.norm)[:, 0]
+        y, sc = xlstm.slstm_decode(p["slstm"], h, cache["slstm"], cfg)
+        return x_t + y, {"mlstm": mc, "slstm": sc}
+    if cfg.family == "hybrid":
+        h = apply_norm(p["ln1"], x_t[:, None], cfg.norm)[:, 0]
+        y, c2 = mamba2.mamba2_decode(p["mamba"], h, cache, cfg)
+        return x_t + y, c2
+    h = apply_norm(p["ln1"], x_t[:, None], cfg.norm)[:, 0]
+    if cfg.mla is not None:
+        a, c2 = attn.mla_decode(p["attn"], h, cache, pos, cfg)
+    else:
+        a, c2 = attn.attention_decode(p["attn"], h, cache, pos, cfg)
+    x_t = x_t + a
+    h = apply_norm(p["ln2"], x_t[:, None], cfg.norm)[:, 0]
+    if cfg.moe is not None:
+        y, _ = mlp.moe_fwd(p["ffn"], h[:, None], cfg)
+        y = y[:, 0]
+    else:
+        y = mlp.mlp_fwd(p["ffn"], h, cfg)
+    return x_t + y, c2
+
+
+def decode_step(params: PyTree, state: PyTree, tokens: Array,
+                cfg: ArchConfig) -> tuple[Array, PyTree]:
+    """One decode step: tokens (B,) int32 -> (logits (B,V), new state)."""
+    pos = state["pos"]
+    x = params["emb"][tokens].astype(jnp.bfloat16)
+    if cfg.pos == "learned":
+        x = x + params["pos_emb"][pos].astype(x.dtype)[None]
+
+    if cfg.family == "hybrid":
+        per = cfg.hybrid.shared_attn_every
+        n_groups = cfg.n_layers // per
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, per) + a.shape[1:]), params["blocks"])
+        gcaches = jax.tree.map(
+            lambda a: a.reshape((n_groups, per) + a.shape[1:]), state["caches"])
+        shared = params["shared"]
+        acfg = _zamba_attn_cfg(cfg)
+
+        def group_step(x, inp):
+            gp, gc, sc = inp
+            h = apply_norm(shared["ln1"], x[:, None], cfg.norm)[:, 0]
+            a, sc2 = attn.attention_decode(shared["attn"], h, sc, pos, acfg)
+            x = x + a
+            h = apply_norm(shared["ln2"], x[:, None], cfg.norm)[:, 0]
+            x = x + mlp.mlp_fwd(shared["ffn"], h, cfg)
+
+            def layer_step(xx, lp_lc):
+                lp, lc = lp_lc
+                y, c2 = _layer_decode(lp, xx, lc, pos, cfg)
+                return y, c2
+
+            x, gc2 = jax.lax.scan(layer_step, x, (gp, gc))
+            return x, (gc2, sc2)
+
+        x, (new_g, new_s) = jax.lax.scan(group_step, x,
+                                         (grouped, gcaches, state["shared_caches"]))
+        new_caches = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_g)
+        new_state = {"caches": new_caches, "pos": pos + 1,
+                     "shared_caches": new_s}
+    else:
+        # fori_loop with in-place dynamic updates: the while-loop carry
+        # aliases its buffers, so the stacked cache is updated in place
+        # (a scan-with-outputs would double-buffer the full cache).
+        nl = n_stacked_layers(cfg)
+
+        def layer_step(i, carry):
+            x, caches = carry
+            lp = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(
+                a, i, 0, keepdims=False), params["blocks"])
+            lc = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(
+                a, i, 0, keepdims=False), caches)
+            y, c2 = _layer_decode(lp, x, lc, pos, cfg)
+            caches = jax.tree.map(
+                lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                    a, u.astype(a.dtype), i, 0), caches, c2)
+            return y, caches
+
+        x, new_caches = jax.lax.fori_loop(0, nl, layer_step,
+                                          (x, state["caches"]))
+        new_state = {"caches": new_caches, "pos": pos + 1}
+
+    x = apply_norm(params["final_norm"], x[:, None], cfg.norm)[:, 0]
+    logits = lm_logits(params, x, cfg)
+    return logits.astype(jnp.float32), new_state

@@ -1,0 +1,196 @@
+"""Mamba2 mixer (SSD — state-space duality), chunked-parallel + decode step.
+
+Training/prefill uses the chunkwise SSD algorithm: within a chunk the output
+is a masked (quasi-causal) attention-like product; across chunks a small
+recurrence over per-chunk states runs under `lax.scan`.  Decode is the exact
+O(1) recurrent update.  This is the TPU-native adaptation: chunk-local work
+is MXU matmuls; only the tiny (H, P, N) state crosses chunk boundaries.
+
+Shapes: x (B, S, D) -> inner D_i = expand*D split into H = D_i/P heads of
+dim P, with per-head scalar decay a_t = exp(-softplus(dt) * A) and
+(grouped) B/C projections of state size N.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.common import dense_init
+from repro.parallel.axes import logical
+
+Array = jax.Array
+
+
+def dims(cfg: ArchConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def init_mamba2(key: Array, cfg: ArchConfig) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner, nh = dims(cfg)
+    ks = jax.random.split(key, 5)
+    # in_proj packs [x_path, z_gate, B, C, dt] like the reference impl
+    d_bc = 2 * s.n_groups * s.state
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner + d_bc + nh)),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (s.conv_width, d_inner + d_bc))
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((d_inner + d_bc,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.full((nh,), np.log(np.expm1(0.01)), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_inner,), jnp.float32)},
+        "out_proj": dense_init(ks[4], (d_inner, d)),
+    }
+
+
+def _split_proj(proj: Array, cfg: ArchConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner, nh = dims(cfg)
+    d_bc = 2 * s.n_groups * s.state
+    xz, rest = proj[..., : 2 * d_inner], proj[..., 2 * d_inner:]
+    x_in, z = xz[..., :d_inner], xz[..., d_inner:]
+    bc, dt = rest[..., :d_bc], rest[..., d_bc:]
+    b = bc[..., : s.n_groups * s.state]
+    c = bc[..., s.n_groups * s.state:]
+    return x_in, z, b, c, dt
+
+
+def _gated_rmsnorm(p: dict, x: Array, z: Array, eps: float = 1e-6) -> Array:
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"]).astype(x.dtype)
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over time.  x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def mamba2_fwd(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    """Chunked SSD forward.  x: (B, S, D); S % chunk == 0 (configs ensure)."""
+    s: SSMConfig = cfg.ssm
+    bsz, seq, _ = x.shape
+    d_inner, nh = dims(cfg)
+    ch = min(s.chunk, seq)
+    assert seq % ch == 0, (seq, ch)
+    nch = seq // ch
+
+    proj = x @ p["in_proj"].astype(x.dtype)
+    x_in, z, b, c, dt = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([x_in, b, c], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                        p["conv_b"].astype(x.dtype)))
+    x_in = conv_out[..., :d_inner]
+    b = conv_out[..., d_inner: d_inner + s.n_groups * s.state]
+    c = conv_out[..., d_inner + s.n_groups * s.state:]
+
+    hdim = s.head_dim
+    xh = logical(x_in.reshape(bsz, seq, nh, hdim),
+                 "batch", "seq", "ssm_heads", None)
+    # broadcast grouped B/C to heads
+    bg = b.reshape(bsz, seq, s.n_groups, s.state)
+    cg = c.reshape(bsz, seq, s.n_groups, s.state)
+    rep = nh // s.n_groups
+    bh = jnp.repeat(bg, rep, axis=2)
+    chd = jnp.repeat(cg, rep, axis=2)
+
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                        # (H,)
+    la = dt_s * a                                                   # log decay
+    xdt = xh * dt_s.astype(x.dtype)[..., None]
+
+    # --- chunked scan ---
+    lac = la.reshape(bsz, nch, ch, nh)
+    cum = jnp.cumsum(lac, axis=2)                                   # (B,N,ch,H)
+    seg_total = cum[:, :, -1, :]                                    # (B,N,H)
+    xc = xdt.reshape(bsz, nch, ch, nh, hdim)
+    bc_ = bh.reshape(bsz, nch, ch, nh, s.state)
+    cc_ = chd.reshape(bsz, nch, ch, nh, s.state)
+
+    # intra-chunk (quasi-attention with decay mask), fp32 decays
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]             # (B,N,t,u,H)
+    mask = jnp.tril(jnp.ones((ch, ch), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bnthi,bnuhi->bntuh", cc_, bc_) * decay.astype(x.dtype)
+    y_intra = jnp.einsum("bntuh,bnuhp->bnthp", scores, xc)
+
+    # per-chunk input->state contribution
+    decay_in = jnp.exp(seg_total[:, :, None, :] - cum)              # (B,N,ch,H)
+    state_in = jnp.einsum("bnthi,bnth,bnthp->bnhip", bc_,
+                          decay_in.astype(x.dtype), xc)             # (B,N,H,S,P)
+
+    def chunk_step(h0, inp):
+        st_in, seg = inp                                            # (B,H,S,P),(B,H)
+        h1 = h0 * jnp.exp(seg)[..., None, None] + st_in
+        return h1, h0
+
+    # state recurrence in f32 for accuracy across many chunks
+    st_seq = jnp.moveaxis(state_in, 1, 0).astype(jnp.float32)       # (N,B,H,S,P)
+    seg_seq = jnp.moveaxis(seg_total, 1, 0)                         # (N,B,H)
+    h0 = jnp.zeros((bsz, nh, s.state, hdim), jnp.float32)
+    _, h_prev = jax.lax.scan(chunk_step, h0, (st_seq, seg_seq))
+    h_prev = jnp.moveaxis(h_prev, 0, 1).astype(x.dtype)             # (B,N,H,S,P)
+
+    # inter-chunk output: C_t . (decay * h_prev)
+    decay_out = jnp.exp(cum)                                        # (B,N,ch,H)
+    y_inter = jnp.einsum("bnthi,bnth,bnhip->bnthp", cc_,
+                         decay_out.astype(x.dtype), h_prev)
+    y = (y_intra + y_inter).reshape(bsz, seq, nh, hdim)
+    y = y + xh * p["d_skip"].astype(x.dtype)[:, None]
+    y = logical(y.reshape(bsz, seq, d_inner), "batch", "seq", "inner")
+    y = _gated_rmsnorm(p["norm"], y, z)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def init_mamba2_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    s: SSMConfig = cfg.ssm
+    d_inner, nh = dims(cfg)
+    d_bc = 2 * s.n_groups * s.state
+    return {
+        "ssm": jnp.zeros((batch, nh, s.state, s.head_dim), dtype),
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_inner + d_bc), dtype),
+    }
+
+
+def mamba2_decode(p: dict, x_t: Array, state: dict, cfg: ArchConfig):
+    """Exact single-token recurrence.  x_t: (B, D)."""
+    s: SSMConfig = cfg.ssm
+    bsz, _ = x_t.shape
+    d_inner, nh = dims(cfg)
+    proj = x_t @ p["in_proj"].astype(x_t.dtype)
+    x_in, z, b, c, dt = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([x_in, b, c], axis=-1)                # (B, C)
+    hist = jnp.concatenate([state["conv"], conv_in[:, None, :].astype(
+        state["conv"].dtype)], axis=1)                              # (B, K, C)
+    w = p["conv_w"].astype(x_t.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist.astype(x_t.dtype), w)
+                           + p["conv_b"].astype(x_t.dtype))
+    new_conv = hist[:, 1:, :]
+    x_in = conv_out[..., :d_inner]
+    b = conv_out[..., d_inner: d_inner + s.n_groups * s.state]
+    c = conv_out[..., d_inner + s.n_groups * s.state:]
+
+    xh = x_in.reshape(bsz, nh, s.head_dim)
+    rep = nh // s.n_groups
+    bh = jnp.repeat(b.reshape(bsz, s.n_groups, s.state), rep, axis=1)
+    ch = jnp.repeat(c.reshape(bsz, s.n_groups, s.state), rep, axis=1)
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    decay = jnp.exp(dt_s * (-jnp.exp(p["a_log"])))                  # (B,H)
+    upd = jnp.einsum("bhi,bhp->bhip", bh, xh * dt_s.astype(x_t.dtype)[..., None])
+    h_new = state["ssm"] * decay[..., None, None].astype(state["ssm"].dtype) \
+        + upd.astype(state["ssm"].dtype)
+    y = jnp.einsum("bhi,bhip->bhp", ch, h_new.astype(x_t.dtype))
+    y = y + xh * p["d_skip"].astype(x_t.dtype)[None, :, None]
+    y = y.reshape(bsz, d_inner)
+    y = _gated_rmsnorm(p["norm"], y, z)
+    return y @ p["out_proj"].astype(x_t.dtype), {"ssm": h_new, "conv": new_conv}

@@ -1,0 +1,47 @@
+"""PaliGemma-style VLM backbone (vlm family).
+
+Per the assignment the SigLIP vision tower is a STUB: `input_specs()`
+provides precomputed patch embeddings (B, 256, d_model).  The language
+decoder is a Gemma-style transformer (MQA kv=1, GeGLU d_ff=16384, head_dim
+256, RoPE) that attends with a *prefix-LM* mask: bidirectional across the
+image patches, causal over text — per arXiv:2407.07726.
+
+Decode reuses the generic `lm.decode_step` (past the prefix everything is
+ordinary causal decoding over the joint cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common, lm
+from repro.models.common import prefix_lm_mask
+
+Array = jax.Array
+
+
+def init_paligemma(key: Array, cfg: ArchConfig):
+    return lm.init_lm(key, cfg)
+
+
+def paligemma_loss(params, batch: dict, cfg: ArchConfig, *, remat: bool = False):
+    """batch: patches (B, P, D) float, inputs (B, S) int32, targets (B, S)."""
+    patches = batch["patches"]
+    p = patches.shape[1]
+    s = batch["inputs"].shape[1]
+    mask = prefix_lm_mask(p + s, p)
+    hidden, aux = lm.lm_hidden(params, batch["inputs"], cfg, mask=mask,
+                               prefix_embeds=patches, remat=remat)
+    logits = lm.lm_logits(params, hidden[:, p:], cfg)
+    loss, metrics = common.softmax_cross_entropy(logits, batch["targets"])
+    metrics["aux_loss"] = aux
+    return loss + aux, metrics
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int):
+    return lm.init_decode_state(cfg, batch, max_seq)
+
+
+def decode_step(params, state, tokens: Array, cfg: ArchConfig):
+    return lm.decode_step(params, state, tokens, cfg)

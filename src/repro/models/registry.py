@@ -1,0 +1,91 @@
+"""Model registry: uniform (init / loss / decode) API over all families,
+plus exact parameter accounting used by the roofline's MODEL_FLOPS terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm, paligemma, whisper
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable[[Array], Any]
+    loss: Callable[[Any, dict], tuple[Array, dict]]
+    init_decode_state: Callable[[int, int], Any]
+    decode_step: Callable[[Any, Any, Array], tuple[Array, Any]]
+
+
+def build_model(cfg: ArchConfig, *, remat: bool = False,
+                mlstm_chunked: bool = False) -> ModelAPI:
+    if cfg.family == "audio":
+        return ModelAPI(
+            cfg,
+            init=lambda key: whisper.init_whisper(key, cfg),
+            loss=lambda p, b: whisper.whisper_loss(p, b, cfg, remat=remat),
+            init_decode_state=lambda bs, s: whisper.init_whisper_decode_state(cfg, bs, s),
+            decode_step=lambda p, st, t: whisper.whisper_decode_step(p, st, t, cfg),
+        )
+    if cfg.family == "vlm":
+        return ModelAPI(
+            cfg,
+            init=lambda key: paligemma.init_paligemma(key, cfg),
+            loss=lambda p, b: paligemma.paligemma_loss(p, b, cfg, remat=remat),
+            init_decode_state=lambda bs, s: paligemma.init_decode_state(cfg, bs, s),
+            decode_step=lambda p, st, t: paligemma.decode_step(p, st, t, cfg),
+        )
+    return ModelAPI(
+        cfg,
+        init=lambda key: lm.init_lm(key, cfg),
+        loss=lambda p, b: lm.lm_loss(p, b, cfg, remat=remat,
+                                     mlstm_chunked=mlstm_chunked),
+        init_decode_state=lambda bs, s: lm.init_decode_state(cfg, bs, s),
+        decode_step=lambda p, st, t: lm.decode_step(p, st, t, cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting (for 6*N*D roofline terms)
+# ---------------------------------------------------------------------------
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Exact count by tracing init with ShapeDtypeStructs (no allocation).
+
+    active_only: MoE experts counted at top_k (+shared) instead of all E —
+    the 6*N_active*D convention from the brief.
+    """
+    api = build_model(cfg)
+    shapes = jax.eval_shape(api.init, jax.random.key(0))
+    total = 0
+
+    def add(path, leaf):
+        nonlocal total
+        n = int(np.prod(leaf.shape))
+        name = jax.tree_util.keystr(path)
+        if active_only and cfg.moe is not None and (
+                "'wi'" in name or "'wg'" in name or "'wo'" in name) and (
+                "ffn" in name) and ("shared" not in name) and ("dense" not in name)\
+                and len(leaf.shape) >= 3:
+            # stacked expert tensors: (L, E, d, f) -> count top_k of E
+            n = n * cfg.moe.top_k // cfg.moe.n_experts
+        total += n
+
+    jax.tree_util.tree_map_with_path(add, shapes)
+    return total
+
+
+def embedding_params(cfg: ArchConfig) -> int:
+    n = cfg.vocab * cfg.d_model
+    if not cfg.tie_embeddings and cfg.family != "audio":
+        n *= 2
+    if cfg.pos == "learned":
+        n += 8192 * cfg.d_model
+    return n

@@ -1,0 +1,219 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment, the conv frontend is a STUB: `input_specs()` provides
+precomputed frame embeddings (B, F, d_model) — everything downstream (32
+encoder layers, 32 decoder layers with cross-attention, decode caches) is
+real.  Norm = LayerNorm, plain GELU MLPs, sinusoidal positions (encoder) /
+learned positions (decoder), MHA (kv == heads), as in arXiv:2212.04356.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import common, mlp
+from repro.models.common import (NEG_INF, apply_norm, causal_mask, dense_init,
+                                 embed_init, init_norm, sinusoidal_positions)
+from repro.parallel.axes import logical
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# cross attention
+# ---------------------------------------------------------------------------
+def init_cross_attention(key: Array, cfg: ArchConfig) -> dict:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], (d, h * dh)),
+            "wk": dense_init(ks[1], (d, h * dh)),
+            "wv": dense_init(ks[2], (d, h * dh)),
+            "wo": dense_init(ks[3], (h * dh, d))}
+
+
+def cross_kv(p: dict, enc: Array, cfg: ArchConfig):
+    b, f, _ = enc.shape
+    h, dh = cfg.n_heads, cfg.resolved_head_dim
+    k = (enc @ p["wk"].astype(enc.dtype)).reshape(b, f, h, dh)
+    v = (enc @ p["wv"].astype(enc.dtype)).reshape(b, f, h, dh)
+    return k, v
+
+
+def cross_attention_fwd(p: dict, x: Array, k: Array, v: Array,
+                        cfg: ArchConfig) -> Array:
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, dh)
+    scores = jnp.einsum("bshd,bfhd->bhsf", q, k) / np.sqrt(dh)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhsf,bfhd->bshd", probs, v).reshape(b, s, h * dh)
+    return out @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_enc_layer(key: Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    return {"ln1": init_norm(d, cfg.norm),
+            "attn": attn.init_attention(ks[0], cfg),
+            "ln2": init_norm(d, cfg.norm),
+            "ffn": mlp.init_mlp(ks[1], d, cfg.d_ff, cfg)}
+
+
+def _init_dec_layer(key: Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {"ln1": init_norm(d, cfg.norm),
+            "attn": attn.init_attention(ks[0], cfg),
+            "lnx": init_norm(d, cfg.norm),
+            "xattn": init_cross_attention(ks[1], cfg),
+            "ln2": init_norm(d, cfg.norm),
+            "ffn": mlp.init_mlp(ks[2], d, cfg.d_ff, cfg)}
+
+
+def init_whisper(key: Array, cfg: ArchConfig) -> dict:
+    ne = cfg.encdec.n_enc_layers
+    nd = cfg.n_layers
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    enc_keys = jax.random.split(k1, ne)
+    dec_keys = jax.random.split(k2, nd)
+    return {
+        "enc_blocks": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": init_norm(cfg.d_model, cfg.norm),
+        "emb": embed_init(k3, (cfg.vocab, cfg.d_model)),
+        "pos_emb": embed_init(k4, (common.MAX_LEARNED_POS, cfg.d_model)),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "dec_norm": init_norm(cfg.d_model, cfg.norm),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def encode(params: dict, frames: Array, cfg: ArchConfig, *,
+           remat: bool = False) -> Array:
+    """frames: (B, F, D) stub embeddings -> encoder hidden (B, F, D)."""
+    b, f, d = frames.shape
+    x = frames.astype(jnp.bfloat16) + sinusoidal_positions(f, d).astype(jnp.bfloat16)[None]
+    x = logical(x, "batch", "frames", "embed")
+    full = jnp.ones((f, f), jnp.bool_)
+    positions = jnp.arange(f)
+
+    def step(x, lp):
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        x = x + attn.attention_fwd(lp["attn"], h, cfg, mask=full, positions=positions)
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        return x + mlp.mlp_fwd(lp["ffn"], h, cfg), None
+
+    if remat:
+        step = jax.checkpoint(step)
+    x, _ = jax.lax.scan(step, x, params["enc_blocks"])
+    return apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def decode_fwd(params: dict, tokens: Array, enc: Array, cfg: ArchConfig, *,
+               remat: bool = False, attn_impl: str = "dense") -> Array:
+    """Teacher-forced decoder forward.  Returns logits (B, S, V)."""
+    b, s = tokens.shape
+    x = params["emb"][tokens].astype(jnp.bfloat16)
+    x = x + params["pos_emb"][:s].astype(x.dtype)[None]
+    x = logical(x, "batch", "seq", "embed")
+    mask = causal_mask(s) if attn_impl == "dense" else None
+    positions = jnp.arange(s)
+
+    def step(x, lp):
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        if attn_impl == "blockwise":
+            a = attn.attention_fwd_blockwise(lp["attn"], h, cfg,
+                                             positions=positions)
+        else:
+            a = attn.attention_fwd(lp["attn"], h, cfg, mask=mask,
+                                   positions=positions)
+        x = x + a
+        h = apply_norm(lp["lnx"], x, cfg.norm)
+        k, v = cross_kv(lp["xattn"], enc, cfg)
+        x = x + cross_attention_fwd(lp["xattn"], h, k, v, cfg)
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        return x + mlp.mlp_fwd(lp["ffn"], h, cfg), None
+
+    if remat:
+        step = jax.checkpoint(step)
+    x, _ = jax.lax.scan(step, x, params["dec_blocks"])
+    x = apply_norm(params["dec_norm"], x, cfg.norm)
+    logits = x @ params["emb"].T.astype(x.dtype)   # whisper ties output to emb
+    return logical(logits, "batch", "logits_seq", "vocab")
+
+
+def whisper_loss(params: dict, batch: dict, cfg: ArchConfig, *,
+                 remat: bool = False):
+    enc = encode(params, batch["frames"], cfg, remat=remat)
+    logits = decode_fwd(params, batch["inputs"], enc, cfg, remat=remat)
+    loss, metrics = common.softmax_cross_entropy(logits, batch["targets"])
+    metrics["aux_loss"] = jnp.float32(0.0)
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+def init_whisper_decode_state(cfg: ArchConfig, batch: int, max_seq: int):
+    nd = cfg.n_layers
+    h, dh = cfg.n_heads, cfg.resolved_head_dim
+    f = cfg.encdec.enc_frames
+    self_cache = attn.init_kv_cache(cfg, batch, max_seq)
+    return {
+        "caches": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (nd,) + a.shape), self_cache),
+        "cross_k": jnp.zeros((nd, batch, f, h, dh), jnp.bfloat16),
+        "cross_v": jnp.zeros((nd, batch, f, h, dh), jnp.bfloat16),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def precompute_cross(params: dict, frames: Array, cfg: ArchConfig):
+    """Run the encoder once and cache per-layer cross K/V for decode."""
+    enc = encode(params, frames, cfg)
+
+    def per_layer(lp):
+        k, v = cross_kv(lp["xattn"], enc, cfg)
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+    return jax.vmap(per_layer)(params["dec_blocks"])
+
+
+def whisper_decode_step(params: dict, state: dict, tokens: Array,
+                        cfg: ArchConfig):
+    pos = state["pos"]
+    x = params["emb"][tokens].astype(jnp.bfloat16)
+    x = x + params["pos_emb"][pos].astype(x.dtype)[None]
+    nl = cfg.n_layers
+
+    def step(i, carry):
+        x, caches = carry
+        at = lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+        lp = jax.tree.map(at, params["dec_blocks"])
+        cache = jax.tree.map(at, caches)
+        ck, cv = at(state["cross_k"]), at(state["cross_v"])
+        h = apply_norm(lp["ln1"], x[:, None], cfg.norm)[:, 0]
+        a, c2 = attn.attention_decode(lp["attn"], h, cache, pos, cfg)
+        x = x + a
+        h = apply_norm(lp["lnx"], x[:, None], cfg.norm)
+        x = x + cross_attention_fwd(lp["xattn"], h, ck.astype(h.dtype),
+                                    cv.astype(h.dtype), cfg)[:, 0]
+        h = apply_norm(lp["ln2"], x[:, None], cfg.norm)[:, 0]
+        x = x + mlp.mlp_fwd(lp["ffn"], h, cfg)
+        caches = jax.tree.map(
+            lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                a, u.astype(a.dtype), i, 0), caches, c2)
+        return x, caches
+
+    x, new_caches = jax.lax.fori_loop(0, nl, step, (x, state["caches"]))
+    x = apply_norm(params["dec_norm"], x[:, None], cfg.norm)[:, 0]
+    logits = x @ params["emb"].T.astype(x.dtype)
+    new_state = dict(state, caches=new_caches, pos=pos + 1)
+    return logits.astype(jnp.float32), new_state

@@ -1,0 +1,295 @@
+"""xLSTM mixers: mLSTM (matrix memory, exponential gating) and sLSTM
+(scalar memory, recurrent gate mixing), per arXiv:2405.04517.
+
+Training forward for the mLSTM uses the exact stabilized recurrence under
+`lax.scan` over time (baseline); `mlstm_fwd_chunked` is the chunkwise
+parallel form used as a perf iteration for the long-context cells — both are
+cross-checked by tests.  The sLSTM is inherently sequential (nonlinear
+recurrent mixing) and always scans; its per-step work is tiny.
+
+Blocks follow the paper's pre-LN residual structure with up/down projection
+(proj_factor) and a causal conv on the mLSTM q/k path.  d_ff = 0 in the
+assigned config: there is no separate FFN — the projections inside the
+blocks play that role.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, XLSTMConfig
+from repro.models.common import dense_init
+
+Array = jax.Array
+
+
+def _dims(cfg: ArchConfig):
+    x: XLSTMConfig = cfg.xlstm
+    inner = int(x.proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    assert inner % nh == 0
+    return inner, nh, inner // nh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(key: Array, cfg: ArchConfig) -> dict:
+    x: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    inner, nh, dh = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], (d, inner)),
+        "gate": dense_init(ks[1], (d, inner)),
+        "conv_w": (0.1 * jax.random.normal(ks[2], (x.conv_width, inner))).astype(jnp.float32),
+        "conv_b": jnp.zeros((inner,), jnp.float32),
+        "wq": dense_init(ks[3], (inner, inner)),
+        "wk": dense_init(ks[4], (inner, inner)),
+        "wv": dense_init(ks[5], (inner, inner)),
+        "w_if": dense_init(ks[6], (inner, 2 * nh)),
+        "b_if": jnp.concatenate([jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]).astype(jnp.float32),
+        "down": dense_init(ks[7], (inner, d)),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(k)) + b
+
+
+def _mlstm_qkvif(p: dict, x: Array, cfg: ArchConfig):
+    b, s, _ = x.shape
+    inner, nh, dh = _dims(cfg)
+    up = x @ p["up"].astype(x.dtype)
+    gate = jax.nn.silu(x @ p["gate"].astype(x.dtype))
+    conv = jax.nn.silu(_causal_conv(up, p["conv_w"].astype(x.dtype),
+                                    p["conv_b"].astype(x.dtype)))
+    q = (conv @ p["wq"].astype(x.dtype)).reshape(b, s, nh, dh)
+    k = (conv @ p["wk"].astype(x.dtype)).reshape(b, s, nh, dh) / np.sqrt(dh)
+    v = (up @ p["wv"].astype(x.dtype)).reshape(b, s, nh, dh)
+    if_ = conv @ p["w_if"].astype(x.dtype) + p["b_if"].astype(x.dtype)
+    log_i = if_[..., :nh].astype(jnp.float32)                  # log input gate
+    log_f = jax.nn.log_sigmoid(if_[..., nh:].astype(jnp.float32))
+    return q, k, v, log_i, log_f, gate
+
+
+def mlstm_fwd(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    """Exact stabilized recurrence over time (scan baseline)."""
+    b, s, _ = x.shape
+    inner, nh, dh = _dims(cfg)
+    q, k, v, log_i, log_f, gate = _mlstm_qkvif(p, x, cfg)
+
+    def step(carry, inp):
+        c, n, m = carry                          # (B,H,dh,dh),(B,H,dh),(B,H)
+        qt, kt, vt, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)[..., None]
+        ip = jnp.exp(li - m_new)[..., None]
+        c = c * fp[..., None] + ip[..., None] * (vt[..., :, None] * kt[..., None, :])
+        n = n * fp + ip * kt
+        h_num = jnp.einsum("bhvk,bhk->bhv", c, qt)
+        h_den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        h = h_num / h_den[..., None]
+        return (c, n, m_new), h
+
+    f32 = jnp.float32
+    seq_inputs = (q.swapaxes(0, 1).astype(f32), k.swapaxes(0, 1).astype(f32),
+                  v.swapaxes(0, 1).astype(f32), log_i.swapaxes(0, 1),
+                  log_f.swapaxes(0, 1))
+    carry0 = (jnp.zeros((b, nh, dh, dh), f32), jnp.zeros((b, nh, dh), f32),
+              jnp.full((b, nh), -jnp.inf, f32))
+    _, hs = jax.lax.scan(step, carry0, seq_inputs)
+    h = hs.swapaxes(0, 1).reshape(b, s, inner).astype(x.dtype)
+    return (h * gate) @ p["down"].astype(x.dtype)
+
+
+def mlstm_fwd_chunked(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    """Chunkwise-parallel mLSTM (linear-attention form within chunks).
+
+    Math (per head; chunk-relative log weights): with cum_f[t] = sum_{u<=t}
+    log f_u and input weight at insertion li[u],
+        num[t] = sum_{u<=t} (q_t.k_u) e^{cum_f[t]-cum_f[u]+li[u]} v_u
+                 + q_t . C_in e^{cum_f[t]}
+        den[t] = same with v -> 1 (via n)
+        h[t]   = num[t] / max(|den[t]|, e^{m_abs[t]})
+    where (C_in, n_in) are the unscaled carry states at the chunk start and
+    m_abs[t] = max(max_{u<=t} logweight, m_in + cum_f[t]) is the running max
+    log-weight — giving *exact* equivalence with the stabilized scan form
+    `mlstm_fwd` (tests check this).  Chunk-local work is MXU matmuls; the
+    scan runs over S/chunk boundaries only.
+    """
+    b, s, _ = x.shape
+    inner, nh, dh = _dims(cfg)
+    xcfg: XLSTMConfig = cfg.xlstm
+    ch = min(xcfg.chunk, s)
+    assert s % ch == 0
+    nch = s // ch
+    q, k, v, log_i, log_f, gate = _mlstm_qkvif(p, x, cfg)
+
+    f32 = jnp.float32
+    qc = q.reshape(b, nch, ch, nh, dh).astype(f32)
+    kc = k.reshape(b, nch, ch, nh, dh).astype(f32)
+    vc = v.reshape(b, nch, ch, nh, dh).astype(f32)
+    li = log_i.reshape(b, nch, ch, nh)
+    lf = log_f.reshape(b, nch, ch, nh)
+
+    cum_f = jnp.cumsum(lf, axis=2)                        # (B,N,t,H)
+    seg = cum_f[:, :, -1, :]                              # (B,N,H)
+    wu = li - cum_f                                       # insertion weight rel. chunk start
+    dmat = cum_f[:, :, :, None, :] + wu[:, :, None, :, :]  # (B,N,t,u,H)
+    mask = jnp.tril(jnp.ones((ch, ch), bool))[None, None, :, :, None]
+    dexp = jnp.where(mask, jnp.exp(dmat), 0.0)
+
+    scores = jnp.einsum("bntha,bnuha->bntuh", qc, kc) * dexp
+    num_intra = jnp.einsum("bntuh,bnuhv->bnthv", scores, vc)
+    den_intra = jnp.sum(scores, axis=3)                   # (B,N,t,H)
+    local_max = jnp.max(jnp.where(mask, dmat, -jnp.inf), axis=3)  # (B,N,t,H)
+
+    # carry states into each chunk: C' = e^seg C + sum_u e^{seg+wu[u]} k v^T
+    w_in = jnp.exp(wu + seg[:, :, None, :])               # (B,N,u,H)
+    c_in = jnp.einsum("bnuha,bnuh,bnuhv->bnhav", kc, w_in, vc)  # (B,N,H,dhk,dhv)
+    n_in = jnp.einsum("bnuha,bnuh->bnha", kc, w_in)
+    in_max = jnp.max(wu + seg[:, :, None, :], axis=2)     # (B,N,H)
+
+    def chunk_step(carry, inp):
+        c, n, m = carry
+        c_i, n_i, sg, im = inp
+        c2 = c * jnp.exp(sg)[..., None, None] + c_i
+        n2 = n * jnp.exp(sg)[..., None] + n_i
+        m2 = jnp.maximum(m + sg, im)
+        return (c2, n2, m2), (c, n, m)
+
+    mv = lambda a: jnp.moveaxis(a, 1, 0)
+    carry0 = (jnp.zeros((b, nh, dh, dh), f32), jnp.zeros((b, nh, dh), f32),
+              jnp.full((b, nh), -jnp.inf, f32))
+    _, (c_prev, n_prev, m_prev) = jax.lax.scan(
+        chunk_step, carry0, (mv(c_in), mv(n_in), mv(seg), mv(in_max)))
+    c_prev = jnp.moveaxis(c_prev, 0, 1)                   # (B,N,H,dhk,dhv)
+    n_prev = jnp.moveaxis(n_prev, 0, 1)
+    m_prev = jnp.moveaxis(m_prev, 0, 1)                   # (B,N,H)
+
+    w_out = jnp.exp(cum_f)                                # (B,N,t,H)
+    num_inter = jnp.einsum("bntha,bnhav,bnth->bnthv", qc, c_prev, w_out)
+    den_inter = jnp.einsum("bntha,bnha,bnth->bnth", qc, n_prev, w_out)
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    m_abs = jnp.maximum(local_max, m_prev[:, :, None, :] + cum_f)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(m_abs))[..., None]
+    h = h.reshape(b, s, inner).astype(x.dtype)            # (B,N,t,H,dhv) -> (B,S,inner)
+    return (h * gate) @ p["down"].astype(x.dtype)
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int):
+    x: XLSTMConfig = cfg.xlstm
+    inner, nh, dh = _dims(cfg)
+    return {
+        "c": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, x.conv_width - 1, inner), jnp.float32),
+    }
+
+
+def mlstm_decode(p: dict, x_t: Array, state: dict, cfg: ArchConfig):
+    b, _ = x_t.shape
+    inner, nh, dh = _dims(cfg)
+    up = x_t @ p["up"].astype(x_t.dtype)
+    gate = jax.nn.silu(x_t @ p["gate"].astype(x_t.dtype))
+    hist = jnp.concatenate([state["conv"], up[:, None, :].astype(state["conv"].dtype)], 1)
+    w = p["conv_w"].astype(x_t.dtype)
+    conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist.astype(x_t.dtype), w)
+                       + p["conv_b"].astype(x_t.dtype))
+    q = (conv @ p["wq"].astype(x_t.dtype)).reshape(b, nh, dh).astype(jnp.float32)
+    k = ((conv @ p["wk"].astype(x_t.dtype)).reshape(b, nh, dh)
+         / np.sqrt(dh)).astype(jnp.float32)
+    v = (up @ p["wv"].astype(x_t.dtype)).reshape(b, nh, dh).astype(jnp.float32)
+    if_ = conv @ p["w_if"].astype(x_t.dtype) + p["b_if"].astype(x_t.dtype)
+    li = if_[..., :nh].astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(if_[..., nh:].astype(jnp.float32))
+    m_new = jnp.maximum(lf + state["m"], li)
+    fp = jnp.exp(lf + state["m"] - m_new)[..., None]
+    ip = jnp.exp(li - m_new)[..., None]
+    c = state["c"] * fp[..., None] + ip[..., None] * (v[..., :, None] * k[..., None, :])
+    n = state["n"] * fp + ip * k
+    h_num = jnp.einsum("bhvk,bhk->bhv", c, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h = (h_num / h_den[..., None]).reshape(b, inner).astype(x_t.dtype)
+    y = (h * gate) @ p["down"].astype(x_t.dtype)
+    return y, {"c": c, "n": n, "m": m_new, "conv": hist[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(key: Array, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d)),        # i, f, z, o
+        "r_gates": (0.2 * jax.random.normal(ks[1], (nh, dh, 4 * dh))
+                    ).astype(jnp.float32),               # recurrent, per head
+        "b_gates": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                                    jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "down": dense_init(ks[2], (d, d)),
+    }
+
+
+def _slstm_scan(p: dict, gx: Array, cfg: ArchConfig, carry0):
+    """gx: (B, S, 4D) input-side gate preactivations."""
+    b, s, _ = gx.shape
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    r = p["r_gates"]
+
+    def step(carry, g_in):
+        c, n, m, h = carry                                # all (B, H, dh) / m:(B,H,dh)
+        rec = jnp.einsum("bhd,hdg->bhg", h, r)            # (B,H,4dh)
+        g = g_in.reshape(b, nh, 4 * dh) + rec
+        li, lf, z, o = jnp.split(g, 4, axis=-1)
+        lf = jax.nn.log_sigmoid(lf)
+        m_new = jnp.maximum(lf + m, li)
+        ip = jnp.exp(li - m_new)
+        fp = jnp.exp(lf + m - m_new)
+        c2 = fp * c + ip * jnp.tanh(z)
+        n2 = fp * n + ip
+        h2 = jax.nn.sigmoid(o) * c2 / jnp.maximum(n2, 1.0)
+        return (c2, n2, m_new, h2), h2
+
+    seq = gx.swapaxes(0, 1).astype(jnp.float32)
+    (c, n, m, h), hs = jax.lax.scan(step, carry0, seq)
+    return (c, n, m, h), hs.swapaxes(0, 1)
+
+
+def slstm_fwd(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    b, s, _ = x.shape
+    d = cfg.d_model
+    nh, dh = cfg.n_heads, d // cfg.n_heads
+    gx = x @ p["w_gates"].astype(x.dtype) + p["b_gates"].astype(x.dtype)
+    carry0 = tuple(jnp.zeros((b, nh, dh), jnp.float32) for _ in range(2)) + (
+        jnp.full((b, nh, dh), -1e30, jnp.float32), jnp.zeros((b, nh, dh), jnp.float32))
+    _, hs = _slstm_scan(p, gx, cfg, carry0)
+    return hs.reshape(b, s, d).astype(x.dtype) @ p["down"].astype(x.dtype)
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int):
+    d, nh = cfg.d_model, cfg.n_heads
+    dh = d // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, nh, dh), -1e30, jnp.float32), "h": z}
+
+
+def slstm_decode(p: dict, x_t: Array, state: dict, cfg: ArchConfig):
+    b, _ = x_t.shape
+    d = cfg.d_model
+    gx = (x_t @ p["w_gates"].astype(x_t.dtype) + p["b_gates"].astype(x_t.dtype))
+    carry0 = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, h), hs = _slstm_scan(p, gx[:, None, :], cfg, carry0)
+    y = hs[:, 0].reshape(b, d).astype(x_t.dtype) @ p["down"].astype(x_t.dtype)
+    return y, {"c": c, "n": n, "m": m, "h": h}

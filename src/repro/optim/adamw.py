@@ -1,0 +1,171 @@
+"""AdamW implemented from scratch (no optax in this environment).
+
+Production features:
+  * configurable moment dtype (f32 default; bf16 halves optimizer HBM —
+    used by the 480B config to fit 16 GB/chip together with FSDP);
+  * global-norm gradient clipping;
+  * decoupled weight decay with a no-decay filter (norms, biases, scalars);
+  * bias-corrected updates; cosine LR schedule with linear warmup.
+
+State is a plain pytree {m, v, count}, sharded exactly like the parameters
+(the sharding policy maps specs leaf-for-leaf), so FSDP shards Adam moments
+along with the weights — ZeRO-1/3 style.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32
+    quantized_moments: bool = False   # int8 blockwise m/v (4x HBM saving)
+    quant_block: int = 256
+    # leaves >= this many elements update under lax.map over their leading
+    # (stacked-layer) axis: peak optimizer temps drop from O(leaf) to
+    # O(leaf / n_layers) — required for the 480B config's 16 GB budget
+    scan_update_threshold: int = 1 << 27
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup -> cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def _decay_mask(params: PyTree) -> PyTree:
+    """True where weight decay applies: >= 2D tensors (not norms/biases)."""
+    return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+
+def _nblocks(n: int, block: int) -> int:
+    return max(1, -(-n // block))
+
+
+def quantize_blockwise(x: Array, block: int) -> tuple[Array, Array]:
+    """Symmetric int8 quantization in blocks along the last axis; shapes
+    stay param-aligned so sharding specs carry over (scale drops the last
+    dim's sharding)."""
+    shape = x.shape
+    last = shape[-1] if shape else 1
+    nb = _nblocks(last, block)
+    pad = nb * block - last
+    xp = jnp.pad(x.reshape(shape[:-1] + (last,)) if shape else x[None],
+                 [(0, 0)] * (max(len(shape), 1) - 1) + [(0, pad)])
+    xb = xp.reshape(xp.shape[:-1] + (nb, block))
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0 + 1e-12
+    q = jnp.round(xb / scale[..., None]).astype(jnp.int8)
+    return q.reshape(xp.shape[:-1] + (nb * block,))[..., :last].reshape(shape) \
+        if pad else q.reshape(shape), scale
+
+
+def dequantize_blockwise(q: Array, scale: Array, block: int) -> Array:
+    shape = q.shape
+    last = shape[-1] if shape else 1
+    nb = scale.shape[-1]
+    pad = nb * block - last
+    qp = jnp.pad(q if shape else q[None],
+                 [(0, 0)] * (max(len(shape), 1) - 1) + [(0, pad)])
+    xb = qp.reshape(qp.shape[:-1] + (nb, block)).astype(jnp.float32)
+    x = xb * scale[..., None]
+    return x.reshape(qp.shape[:-1] + (nb * block,))[..., :last].reshape(shape)
+
+
+def init(params: PyTree, cfg: AdamWConfig) -> PyTree:
+    if cfg.quantized_moments:
+        def qzeros(p):
+            nb = _nblocks(p.shape[-1] if p.shape else 1, cfg.quant_block)
+            return {"q": jnp.zeros(p.shape, jnp.int8),
+                    "s": jnp.zeros(p.shape[:-1] + (nb,) if p.shape else (nb,),
+                                   jnp.float32)}
+
+        return {"m": jax.tree.map(qzeros, params),
+                "v": jax.tree.map(qzeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: PyTree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def update(grads: PyTree, opt_state: PyTree, params: PyTree,
+           cfg: AdamWConfig) -> tuple[PyTree, PyTree, dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = schedule(cfg, count)
+    bc1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    decay = _decay_mask(params)
+
+    def upd(g, m, v, p, wd):
+        g = g.astype(jnp.float32) * scale
+        if cfg.quantized_moments:
+            mf = dequantize_blockwise(m["q"], m["s"], cfg.quant_block)
+            vf = dequantize_blockwise(v["q"], v["s"], cfg.quant_block)
+        else:
+            mf, vf = m.astype(jnp.float32), v.astype(jnp.float32)
+        m2 = cfg.b1 * mf + (1 - cfg.b1) * g
+        v2 = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if wd:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        if cfg.quantized_moments:
+            mq, ms = quantize_blockwise(m2, cfg.quant_block)
+            vq, vs = quantize_blockwise(v2, cfg.quant_block)
+            return p2, {"q": mq, "s": ms}, {"q": vq, "s": vs}
+        return p2, m2.astype(m.dtype), v2.astype(v.dtype)
+
+    def upd_maybe_scanned(g, m, v, p, wd):
+        if (p.size >= cfg.scan_update_threshold and p.ndim >= 2
+                and p.shape[0] <= 256):
+            def one(slc):
+                gi, mi, vi, pi = slc
+                return upd(gi, mi, vi, pi, wd)
+
+            p2, m2, v2 = jax.lax.map(one, (g, m, v, p))
+            return p2, m2, v2
+        return upd(g, m, v, p, wd)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_wd = jax.tree.leaves(decay)
+    out = [upd_maybe_scanned(g, m, v, p, wd) for g, m, v, p, wd
+           in zip(flat_g, flat_m, flat_v, flat_p, flat_wd)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr,
+               "clip_scale": scale}
+    return new_p, {"m": new_m, "v": new_v, "count": count}, metrics

@@ -1,0 +1,303 @@
+"""Sharding policy: parameter PartitionSpecs, activation logical-axis rules,
+and batch / decode-state specs per (arch x mesh).
+
+Scheme (axes: optional "pod" outer-DP, "data" DP/FSDP, "model" TP/EP/SP):
+  * TP over "model" for head/ffn/vocab/expert-packed weight dims;
+  * EP: expert-stacked tensors shard their expert axis over "model";
+  * FSDP over "data" for the other large weight dim (params + Adam state) —
+    on by default for >= `fsdp_threshold` params, required to fit
+    arctic-480b's optimizer state in 16 GB/chip;
+  * activations: batch over ("pod","data"); heads (or attention seq when
+    head count doesn't divide TP) over "model";
+  * decode caches: batch over DP when batch >= dp size, else cache sequence
+    over "model" (split-KV decode).
+
+Every dim is sharded only when divisible by the axis size — `_maybe` guards
+all rules, so the same policy is valid on any mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    cfg: ArchConfig
+    fsdp: bool
+    # "tp": Megatron tensor parallel over "model" (baseline).
+    # "fsdp": ZeRO-3 — the model axis joins the FSDP axis; per-layer weight
+    #   all-gather replaces per-layer activation all-reduce.  The win for
+    #   models whose layer weights are smaller than their activation slabs
+    #   (see EXPERIMENTS.md §Perf napkin math).
+    model_strategy: str = "tp"
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        axes = tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+        if self.model_strategy == "fsdp" and "model" in self.mesh.axis_names:
+            axes = axes + ("model",)     # ZeRO-3: model axis joins DP
+        return axes
+
+    @property
+    def tp(self) -> str | None:
+        if self.model_strategy != "tp":
+            return None
+        return "model" if "model" in self.mesh.axis_names else None
+
+    def axis_size(self, name: str | None) -> int:
+        if name is None:
+            return 1
+        return self.mesh.shape[name]
+
+    # -- helpers ----------------------------------------------------------
+    def _maybe(self, axis, dim: int):
+        if axis is None:
+            return None
+        if isinstance(axis, tuple):
+            sz = int(np.prod([self.mesh.shape[a] for a in axis]))
+        else:
+            sz = self.mesh.shape[axis]
+        return axis if dim % sz == 0 and dim >= sz else None
+
+    @property
+    def fsdp_axis(self):
+        if self.model_strategy == "fsdp":
+            axes = tuple(a for a in ("data", "model")
+                         if a in self.mesh.axis_names)
+            return axes or None
+        return "data" if (self.fsdp and "data" in self.mesh.axis_names) else None
+
+    @property
+    def compute_dtype_cast(self) -> bool:
+        """ZeRO-3: cast the whole parameter tree to bf16 up front so the
+        per-layer all-gathers move bf16, not the f32 master."""
+        return self.model_strategy == "fsdp"
+
+    # -- logical activation rules ------------------------------------------
+    def activation_rules(self, *, decode_batch: int | None = None) -> dict:
+        cfg = self.cfg
+        tp = self.tp
+        heads_ok = tp and cfg.n_heads % self.axis_size(tp) == 0
+        kv_ok = tp and cfg.n_kv_heads % self.axis_size(tp) == 0
+        if cfg.mla is not None:
+            kv_ok = False   # MLA cache is headless: always split-KV on seq
+        # head padding: when H doesn't divide TP but rounding up costs
+        # <= 25% extra attention FLOPs, run attention in merged repeat-KV
+        # form with H padded to the next TP multiple (arctic: 56 -> 64).
+        # Kills the involuntary-remat full gather of bwd attention probs
+        # (EXPERIMENTS.md §Perf arctic it2).
+        padded_heads = None
+        if tp and not heads_ok:
+            ts = self.axis_size(tp)
+            hp = -(-cfg.n_heads // ts) * ts
+            if hp <= 1.25 * cfg.n_heads and hp % cfg.n_kv_heads == 0:
+                padded_heads = hp
+        rules = {
+            "batch": self.dp_axes or None,
+            "seq": None,
+            "embed": None,
+            "vocab": tp,
+            "heads": tp if heads_ok else None,
+            "merged_heads": tp if (heads_ok or padded_heads) else None,
+            "padded_heads": padded_heads,      # int | None (not an axis)
+            "kv_heads": tp if kv_ok else None,
+            "head_dim": None,
+            # context parallelism fallback for awkward head counts
+            "qseq": None if (heads_ok or padded_heads) else tp,
+            "kvseq": None,
+            "ffn": tp,
+            "experts": tp,
+            "moe_groups": self.dp_axes or None,
+            "cap": None,
+            "inner": tp,        # mamba/xlstm inner dim
+            "ssm_heads": (tp if (cfg.ssm and
+                                 (cfg.ssm.expand * cfg.d_model // cfg.ssm.head_dim)
+                                 % self.axis_size(tp) == 0) else None) if tp else None,
+            "state": None,
+            "frames": None,
+            # split-KV decode: when KV heads don't divide TP, the cache
+            # shards its sequence axis over "model" instead (always-on for
+            # decode — the cache dominates decode memory).
+            "cache_seq": None if kv_ok else tp,
+            "logits_seq": None,
+            "embed_carry": None,
+        }
+        if decode_batch is not None:
+            dp = int(np.prod([self.mesh.shape[a] for a in self.dp_axes])) or 1
+            if decode_batch % dp != 0 or decode_batch < dp:
+                rules["batch"] = None
+                rules["cache_seq"] = tp      # split-KV decode
+        return rules
+
+    # -- parameter specs -----------------------------------------------------
+    def param_specs(self, params_shape: PyTree) -> PyTree:
+        """PartitionSpec tree aligned with an eval_shape(init) tree."""
+        cfg = self.cfg
+        tp = self.tp
+        fa = self.fsdp_axis
+
+        def rule(path: str, shape: tuple[int, ...]):
+            nd = len(shape)
+
+            def spec(*names):
+                """Right-align names onto dims (stacked layer dims -> None)."""
+                names = list(names)[-nd:] if len(names) > nd else list(names)
+                pad = [None] * (nd - len(names))
+                out = pad + [self._maybe(a, shape[i + len(pad)])
+                             for i, a in enumerate(names)]
+                return P(*out)
+
+            # --- MoE expert-stacked tensors (L, E, d, f) / router ---
+            is_expert = (cfg.moe is not None and "'ffn'" in path
+                         and not any(k in path for k in
+                                     ("'shared'", "'dense'", "'router'")))
+            if "'router'" in path:
+                return spec(fa, None)
+            if is_expert:
+                if any(k in path for k in ("'wi'", "'wg'")):
+                    return spec(tp, fa, None)      # (E, d, f): EP + FSDP
+                if "'wo'" in path:
+                    return spec(tp, None, fa)
+                # shared / dense sub-mlps fall through to dense rules
+            if any(k in path for k in ("'wi'", "'wg'")):
+                return spec(fa, tp)
+            if "'wo'" in path and "attn" not in path and "xattn" not in path:
+                return spec(tp, fa)
+            # --- attention ---
+            if "'attn'" in path or "'xattn'" in path or "'mlstm'" in path:
+                if any(k in path for k in ("'wq'", "'wk'", "'wv'", "'up'",
+                                           "'gate'", "'w_if'")):
+                    return spec(fa, tp)
+                if any(k in path for k in ("'wo'", "'down'")):
+                    return spec(tp, fa)
+                if any(k in path for k in ("'w_dkv'", "'w_kr'")):
+                    return spec(fa, tp)
+                if any(k in path for k in ("'w_uk'", "'w_uv'")):
+                    return spec(None, tp)
+                if any(k in path for k in ("'bq'", "'bk'", "'bv'")):
+                    return spec(tp)
+                if "'conv_w'" in path:
+                    return spec(None, tp)
+            if "'slstm'" in path:
+                if "'w_gates'" in path:
+                    return spec(fa, None)
+                # NOTE (§Perf xlstm it2, REFUTED): sharding r_gates' output
+                # dim over "model" was predicted to cut the per-timestep
+                # dL/dR psum 16x; measured it *increased* traffic (GSPMD
+                # reshards the gate activations inside the loop instead).
+                # Kept replicated; the proper fix is a custom VJP that
+                # accumulates dL/dR locally across time (future work).
+                if "'down'" in path:
+                    return spec(None, fa)
+                return P(*([None] * nd))
+            # --- mamba ---
+            if "'mamba'" in path:
+                if "'in_proj'" in path:
+                    return spec(fa, tp)
+                if "'out_proj'" in path:
+                    return spec(tp, fa)
+                if "'conv_w'" in path:
+                    return spec(None, tp)
+                if "'conv_b'" in path:
+                    return spec(tp)
+                return P(*([None] * nd))
+            # --- embeddings / head ---
+            if path.endswith("['emb']"):
+                return spec(tp, fa)
+            if path.endswith("['head']"):
+                return spec(fa, tp)
+            if "'pos_emb'" in path:
+                return spec(None, fa)
+            return P(*([None] * nd))
+
+        def assign(path, leaf):
+            return rule(jax.tree_util.keystr(path), leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+    def param_shardings(self, params_shape: PyTree) -> PyTree:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.param_specs(params_shape))
+
+    # -- batch specs -----------------------------------------------------
+    def batch_specs(self, batch_shape: dict) -> dict:
+        bspec = P(self.dp_axes or None)
+
+        def one(path, leaf):
+            return NamedSharding(self.mesh, P(*([self.dp_axes or None]
+                                                + [None] * (len(leaf.shape) - 1))))
+
+        return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+    # -- decode state specs ------------------------------------------------
+    def decode_state_specs(self, state_shape: PyTree, decode_batch: int) -> PyTree:
+        rules = self.activation_rules(decode_batch=decode_batch)
+        cfg = self.cfg
+        tp = self.tp
+        batch_ax = rules["batch"]
+        cache_seq_ax = rules["cache_seq"]
+
+        def rule(path: str, shape: tuple[int, ...]):
+            nd = len(shape)
+            if shape == ():
+                return P()
+            # stacked leading layer axis -> None
+            if ("['k']" in path or "['v']" in path) and "conv" not in path:
+                # (L, B, KV, S, Dh)
+                if nd == 5:
+                    kv = self._maybe(rules["kv_heads"], shape[2])
+                    return P(None, self._maybe(batch_ax, shape[1]), kv,
+                             self._maybe(cache_seq_ax, shape[3]) if kv is None
+                             else None, None)
+            if "'c_kv'" in path or "'k_rope'" in path:
+                # (L, B, S, dim)
+                return P(None, self._maybe(batch_ax, shape[1]),
+                         self._maybe(cache_seq_ax, shape[2]), None)
+            if "cross_k" in path or "cross_v" in path:
+                # (L, B, F, H, Dh)
+                return P(None, self._maybe(batch_ax, shape[1]), None,
+                         self._maybe(rules["heads"], shape[3]), None)
+            if "'ssm'" in path and nd == 4:          # (L, B, H, S, P)? -> (L,B,H,state,P)
+                return P(None, self._maybe(batch_ax, shape[1]),
+                         self._maybe(rules["ssm_heads"], shape[2]), None)
+            if "'ssm'" in path and nd == 5:
+                return P(None, self._maybe(batch_ax, shape[1]),
+                         self._maybe(rules["ssm_heads"], shape[2]), None, None)
+            if "'conv'" in path and nd == 4:          # (L, B, K, C)
+                return P(None, self._maybe(batch_ax, shape[1]), None,
+                         self._maybe(tp, shape[3]))
+            if "'c'" in path and nd == 5:             # mlstm C (L,B,H,dv,dk)
+                return P(None, self._maybe(batch_ax, shape[1]), None,
+                         self._maybe(tp, shape[3]), None)
+            if nd >= 2:
+                return P(*([None, self._maybe(batch_ax, shape[1])]
+                           + [None] * (nd - 2)))
+            return P(*([None] * nd))
+
+        def assign(path, leaf):
+            return NamedSharding(self.mesh,
+                                 rule(jax.tree_util.keystr(path), leaf.shape))
+
+        return jax.tree_util.tree_map_with_path(assign, state_shape)
+
+
+def make_policy(mesh: Mesh, cfg: ArchConfig, *, fsdp: bool | None = None,
+                fsdp_threshold: int = 6_000_000_000,
+                model_strategy: str = "tp") -> ShardingPolicy:
+    if fsdp is None:
+        from repro.models.registry import count_params
+
+        fsdp = count_params(cfg) >= fsdp_threshold
+    return ShardingPolicy(mesh=mesh, cfg=cfg, fsdp=fsdp,
+                          model_strategy=model_strategy)

@@ -1,0 +1,63 @@
+"""CIM-in-the-loop linear layers: route a projection through the simulated
+ACIM macro (quantization + ADC + analog noise) with straight-through
+gradients — hardware-aware training for models that will deploy on the
+generated macro.
+
+y ~= s_x * s_w * MACRO(bin(x), bin(w))     (1b x 1b, paper Sec. 4 config)
+
+Scales: per-tensor mean-|.| for activations, per-output-column for weights
+(keeps the binary GEMM's dynamic range matched per column ADC).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.acim_numerics import NoiseParams
+from repro.core.acim_spec import MacroSpec
+from repro.kernels.acim_matmul import acim_matmul_ste, mismatch_weights
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    spec: MacroSpec
+    mismatch: bool = True           # fold static cap mismatch into weights
+    instance_seed: int = 0
+
+
+@jax.custom_vjp
+def _sign_ste(x: Array) -> Array:
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _sign_fwd(x):
+    return _sign_ste(x), x
+
+
+def _sign_bwd(x, g):
+    # clipped straight-through (gradients pass inside |x| <= 1)
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+_sign_ste.defvjp(_sign_fwd, _sign_bwd)
+
+
+def cim_linear(x: Array, w: Array, cim: CIMConfig | None) -> Array:
+    """x: (..., K); w: (K, C).  cim=None -> exact matmul (digital path)."""
+    if cim is None:
+        return x @ w
+    s_x = jnp.mean(jnp.abs(x)) + 1e-8
+    s_w = jnp.mean(jnp.abs(w), axis=0, keepdims=True) + 1e-8   # per column
+    bx = _sign_ste(x / s_x)
+    bw = _sign_ste(w / s_w)
+    if cim.mismatch:
+        bw_run = mismatch_weights(bw, cim.spec,
+                                  jax.random.key(cim.instance_seed),
+                                  NoiseParams.from_cal())
+        bw = bw + jax.lax.stop_gradient(bw_run - bw)
+    y = acim_matmul_ste(bx, bw, cim.spec)
+    return y * s_x * s_w

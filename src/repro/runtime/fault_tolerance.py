@@ -1,0 +1,107 @@
+"""Fault-tolerance runtime: preemption handling, failure simulation,
+straggler monitoring, and the auto-restart supervisor loop.
+
+Mechanisms (each exercised by tests):
+  * PreemptionGuard — SIGTERM/SIGINT set a flag; the trainer checkpoints at
+    the next step boundary and exits with RESTART_EXIT_CODE; the supervisor
+    (launch/train.py --supervise) relaunches and training resumes from the
+    atomic checkpoint, bitwise-identically (data pipeline is stateless).
+  * StragglerMonitor — per-step wall-time EMA + deviation; steps slower
+    than `threshold` x EMA are flagged; mitigation hook rebalances data
+    shards away from slow hosts (on this single-process container the
+    mitigation path is exercised with injected delays).
+  * FailureInjector — deterministic fault schedule (by step) for tests:
+    raises SimulatedNodeFailure to prove checkpoint/restart recovers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable
+
+RESTART_EXIT_CODE = 42
+
+
+class SimulatedNodeFailure(RuntimeError):
+    pass
+
+
+class PreemptionGuard:
+    """Installs SIGTERM/SIGINT handlers that request a clean stop."""
+
+    def __init__(self) -> None:
+        self._requested = False
+        self._prev: dict[int, object] = {}
+
+    def install(self) -> "PreemptionGuard":
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            self._prev[sig] = signal.signal(sig, self._handler)
+        return self
+
+    def _handler(self, signum, frame) -> None:  # noqa: ANN001
+        self._requested = True
+
+    @property
+    def preempted(self) -> bool:
+        return self._requested
+
+    def request(self) -> None:   # tests trigger without a real signal
+        self._requested = True
+
+    def uninstall(self) -> None:
+        for sig, prev in self._prev.items():
+            signal.signal(sig, prev)
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    threshold: float = 2.0       # x EMA counts as straggling
+    ema_decay: float = 0.9
+    ema: float | None = None
+    events: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = self.ema is not None and dt > self.threshold * self.ema
+        if is_straggler:
+            self.events.append((step, dt, self.ema))
+        else:
+            # stragglers don't poison the EMA
+            self.ema = dt if self.ema is None else \
+                self.ema_decay * self.ema + (1 - self.ema_decay) * dt
+        return is_straggler
+
+    def mitigation_plan(self, n_hosts: int, slow_host: int) -> list[int]:
+        """Return a data-shard -> host assignment that drains the slow host
+        (its shards round-robin to the others) until it recovers."""
+        return [h if h != slow_host else (h + 1) % n_hosts
+                for h in range(n_hosts)]
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    fail_at_steps: tuple[int, ...] = ()
+    kind: str = "node"           # node | slow
+    slow_seconds: float = 0.0
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at_steps:
+            if self.kind == "node":
+                raise SimulatedNodeFailure(f"injected node failure at step {step}")
+            time.sleep(self.slow_seconds)
+
+
+def run_supervised(make_and_run: Callable[[], int], *, max_restarts: int = 5) -> int:
+    """In-process supervisor: re-invokes the training function while it
+    exits with RESTART_EXIT_CODE or dies with SimulatedNodeFailure."""
+    restarts = 0
+    while True:
+        try:
+            code = make_and_run()
+        except SimulatedNodeFailure:
+            code = RESTART_EXIT_CODE
+        if code != RESTART_EXIT_CODE:
+            return code
+        restarts += 1
+        if restarts > max_restarts:
+            raise RuntimeError("restart budget exhausted")

@@ -1,0 +1,5 @@
+import os
+
+# Tests run on the single real CPU device; only subprocess-based tests use
+# forced host device counts (never set globally — per the brief).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

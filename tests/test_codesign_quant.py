@@ -1,0 +1,93 @@
+"""Codesign recommendations + CIM-in-the-loop training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as creg
+from repro.core.acim_spec import MacroSpec
+from repro.core.codesign import (extract_gemms, mapping_utilization,
+                                 recommend_macro)
+from repro.quant.cim_linear import CIMConfig, cim_linear
+
+
+class TestCodesign:
+    def test_extract_gemms_all_archs(self):
+        for name in creg.ARCH_IDS:
+            gs = extract_gemms(creg.get(name))
+            assert gs, name
+            assert all(g.k > 0 and g.cols > 0 for g in gs), name
+
+    def test_mapping_utilization_bounds(self):
+        spec = MacroSpec(512, 128, 4, 5)
+        for g in extract_gemms(creg.get("qwen3_8b")):
+            u = mapping_utilization(spec, g)
+            assert 0 < u <= 1.0
+
+    def test_recommendation_meets_snr_floor(self):
+        rec = recommend_macro(creg.get("qwen2_5_3b"), array_size=16384,
+                              min_snr_db=5.0, pop_size=96, generations=25)
+        assert rec.snr_db >= 5.0
+        assert rec.utilization > 0.3
+        assert rec.macro_count_for_rate >= 1
+
+    def test_perfect_k_match_prefers_full_rows(self):
+        g_fit = [g for g in extract_gemms(creg.get("qwen2_5_3b"))
+                 if g.name == "wq"][0]     # K = 2048
+        u_fit = mapping_utilization(MacroSpec(512, 32, 2, 5), g_fit)  # N=256
+        u_waste = mapping_utilization(MacroSpec(3072 // 3 * 2, 24, 2, 5)
+                                      if False else MacroSpec(1024, 16, 2, 5),
+                                      g_fit)
+        assert u_fit >= u_waste * 0.99
+
+
+class TestCIMLinear:
+    def test_digital_path_identity(self):
+        x = jax.random.normal(jax.random.key(0), (4, 64))
+        w = jax.random.normal(jax.random.key(1), (64, 16))
+        np.testing.assert_allclose(np.asarray(cim_linear(x, w, None)),
+                                   np.asarray(x @ w), rtol=1e-6)
+
+    def test_cim_path_correlates_with_exact(self):
+        spec = MacroSpec(128, 16, 2, 5)
+        cim = CIMConfig(spec, mismatch=False)
+        x = jax.random.normal(jax.random.key(2), (64, 64))
+        w = 0.1 * jax.random.normal(jax.random.key(3), (64, 16))
+        y = np.asarray(cim_linear(x, w, cim)).ravel()
+        ref = np.asarray(x @ w).ravel()
+        corr = np.corrcoef(y, ref)[0, 1]
+        # 1b x 1b of Gaussian operands: expected correlation ~2/pi ~= 0.64
+        # (sign-quantization of both factors); ADC adds a little on top.
+        assert corr > 0.55, corr
+
+    def test_gradients_flow(self):
+        spec = MacroSpec(128, 8, 2, 4)
+        cim = CIMConfig(spec)
+        x = jax.random.normal(jax.random.key(4), (8, 64))
+        w = 0.1 * jax.random.normal(jax.random.key(5), (64, 8))
+        g = jax.grad(lambda w: jnp.sum(cim_linear(x, w, cim) ** 2))(w)
+        assert bool(jnp.all(jnp.isfinite(g)))
+        assert float(jnp.linalg.norm(g)) > 0
+
+    def test_cim_in_the_loop_training_decreases_loss(self):
+        """Tiny regression net with its hidden layer on the macro."""
+        spec = MacroSpec(128, 16, 2, 5)
+        cim = CIMConfig(spec, mismatch=True)
+        key = jax.random.key(6)
+        w1 = 0.3 * jax.random.normal(key, (16, 64))
+        w2 = 0.3 * jax.random.normal(jax.random.key(7), (64, 1))
+        xs = jax.random.normal(jax.random.key(8), (256, 16))
+        ys = jnp.sin(xs.sum(-1, keepdims=True))
+
+        def loss_fn(params):
+            h = jnp.tanh(cim_linear(xs, params["w1"], cim))
+            pred = h @ params["w2"]
+            return jnp.mean((pred - ys) ** 2)
+
+        params = {"w1": w1, "w2": w2}
+        l0 = float(loss_fn(params))
+        for _ in range(60):
+            g = jax.grad(loss_fn)(params)
+            params = jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+        l1 = float(loss_fn(params))
+        assert l1 < 0.7 * l0, (l0, l1)

@@ -1,0 +1,71 @@
+"""Estimation-model tests: paper anchors, Eq. 11 fit, Fig. 9 trends."""
+import numpy as np
+import pytest
+
+from repro.core import estimator as est
+from repro.core.constants import CAL28
+
+
+class TestPaperAnchors:
+    def test_fig8a_throughput(self):
+        # Fig. 8(a): H=128, W=128, L=2, B=3 -> 3.277 TOPS
+        tops = float(est.throughput_ops(128, 128, 2, 3)) / 1e12
+        assert tops == pytest.approx(3.277, rel=0.002)
+
+    def test_fig8b_throughput(self):
+        tops = float(est.throughput_ops(512, 32, 8, 3)) / 1e12
+        assert tops == pytest.approx(0.813, rel=0.01)
+
+    def test_fig8c_same_throughput_higher_snr(self):
+        tb = float(est.throughput_ops(512, 32, 8, 3))
+        tc = float(est.throughput_ops(256, 64, 8, 3))
+        assert tb == pytest.approx(tc, rel=1e-6)
+        assert float(est.snr_total_db(256, 8, 3)) > float(est.snr_total_db(512, 8, 3))
+
+    def test_fig8a_area(self):
+        assert float(est.area_f2_per_bit(128, 2, 3)) == pytest.approx(4504, rel=0.001)
+
+    def test_area_range_floor_ceiling(self):
+        # paper Fig. 9/10: 1500 - 7500 F^2/bit across the space
+        assert float(est.area_f2_per_bit(2048, 32, 1)) == pytest.approx(1500, rel=0.01)
+        assert float(est.area_f2_per_bit(64, 2, 5)) == pytest.approx(7500, rel=0.01)
+
+    def test_energy_efficiency_span(self):
+        # paper: 50 - 750 TOPS/W
+        lo = float(est.energy_efficiency_tops_w(512, 2, 8))
+        hi = float(est.energy_efficiency_tops_w(4096, 2, 1))
+        assert lo == pytest.approx(50, rel=0.05)
+        assert hi == pytest.approx(750, rel=0.05)
+
+
+class TestEq11Fit:
+    def test_simplified_matches_full(self):
+        k3, k4 = est.fit_eq11_constants(CAL28)
+        pts = [(128, 2, 3), (512, 8, 4), (1024, 4, 6), (256, 2, 7)]
+        for h, l, b in pts:
+            full = float(est.snr_total_db(h, l, b))
+            simp = float(est.snr_simplified_db(h, l, b))
+            assert abs(full - simp) < 1.5, (h, l, b, full, simp)
+
+    def test_k3_positive(self):
+        k3, _ = est.fit_eq11_constants(CAL28)
+        assert k3 > 0
+
+
+class TestFig9Trends:
+    def test_trends(self):
+        from benchmarks.fig9_design_space import trend_checks
+
+        checks = trend_checks()
+        for name, ok in checks.items():
+            assert ok, name
+
+    def test_eq7_cycle_scales_with_b(self):
+        t3 = float(est.cycle_time_s(3))
+        t6 = float(est.cycle_time_s(6))
+        assert t6 > t3
+
+    def test_adc_energy_eq9_grows_4x_per_bit_tail(self):
+        e7 = float(est.adc_energy_fj(7))
+        e8 = float(est.adc_energy_fj(8))
+        assert e8 / e7 > 2.2   # 4^B term dominates at high B (k1 residual)

@@ -1,0 +1,105 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.acim_spec import MacroSpec
+from repro.kernels.acim_matmul import (acim_matmul, acim_matmul_ref,
+                                       acim_matmul_ste, mismatch_weights)
+from repro.kernels.pareto_dom import dominance_matrix, dominance_matrix_ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _pm1(key, shape):
+    return jnp.where(jax.random.bernoulli(jax.random.key(key), 0.5, shape),
+                     1.0, -1.0)
+
+
+SHAPES = [(16, 64, 16, 64, 3), (7, 100, 33, 64, 3), (128, 512, 64, 128, 5),
+          (1, 64, 1, 64, 1), (4, 1000, 20, 256, 6), (5, 64, 130, 32, 4),
+          (2, 3, 2, 64, 2)]
+
+
+class TestAcimMatmul:
+    @pytest.mark.parametrize("m,k,c,n,b", SHAPES)
+    def test_kernel_matches_ref(self, m, k, c, n, b):
+        x = _pm1(m * 7 + k, (m, k))
+        w = _pm1(k * 5 + c, (k, c))
+        spec = MacroSpec(h=2 * n, w=max(c, 1), l=2, b_adc=b)
+        y_k = acim_matmul(x, w, spec)
+        y_r = acim_matmul_ref(x, w, n=n, b_adc=b)
+        np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_r))
+
+    @given(st.integers(1, 33), st.integers(1, 200), st.integers(1, 17),
+           st.sampled_from([64, 128, 256]), st.integers(1, 6))
+    def test_kernel_matches_ref_hypothesis(self, m, k, c, n, b):
+        x = _pm1(m + k, (m, k))
+        w = _pm1(k + c, (k, c))
+        spec = MacroSpec(h=2 * n, w=c, l=2, b_adc=b)
+        np.testing.assert_array_equal(
+            np.asarray(acim_matmul(x, w, spec)),
+            np.asarray(acim_matmul_ref(x, w, n=n, b_adc=b)))
+
+    def test_batched_leading_dims(self):
+        x = _pm1(1, (2, 3, 64))
+        w = _pm1(2, (64, 8))
+        spec = MacroSpec(128, 8, 2, 3)
+        y = acim_matmul(x, w, spec)
+        assert y.shape == (2, 3, 8)
+        np.testing.assert_array_equal(
+            np.asarray(y), np.asarray(acim_matmul_ref(x, w, n=64, b_adc=3)))
+
+    def test_exact_at_high_precision(self):
+        # N=128, B=7 -> delta=2: even +-1 sums are exact (no clip at |s|<128)
+        x = _pm1(3, (8, 256))
+        w = _pm1(4, (256, 16))
+        spec = MacroSpec(256, 16, 2, 7)
+        y = acim_matmul(x, w, spec)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x @ w))
+
+    def test_ste_gradients(self):
+        spec = MacroSpec(128, 16, 2, 4)
+        x = _pm1(5, (4, 64))
+        w = _pm1(6, (64, 16))
+        gx, gw = jax.grad(
+            lambda x, w: jnp.sum(acim_matmul_ste(x, w, spec)), argnums=(0, 1)
+        )(x, w)
+        # STE: gradient of the ideal matmul
+        np.testing.assert_allclose(np.asarray(gw),
+                                   np.asarray(x.T @ jnp.ones((4, 16))), rtol=1e-6)
+        assert bool(jnp.all(jnp.isfinite(gx)))
+
+    def test_mismatch_fold_changes_results_slightly(self):
+        from repro.core.acim_numerics import NoiseParams
+
+        spec = MacroSpec(128, 16, 2, 6)
+        x = _pm1(7, (16, 64))
+        w = _pm1(8, (64, 16))
+        w2 = mismatch_weights(w, spec, jax.random.key(0), NoiseParams.from_cal())
+        y1 = acim_matmul(x, w, spec)
+        y2 = acim_matmul(x, w2, spec)
+        rel = float(jnp.mean(jnp.abs(y2 - y1))) / float(jnp.mean(jnp.abs(y1)) + 1e-9)
+        assert rel < 0.2   # small static perturbation, not catastrophic
+
+
+class TestParetoDom:
+    @pytest.mark.parametrize("p", [3, 8, 100, 256, 513])
+    def test_matches_ref(self, p):
+        f = jax.random.normal(jax.random.key(p), (p, 4))
+        np.testing.assert_array_equal(np.asarray(dominance_matrix(f)),
+                                      np.asarray(dominance_matrix_ref(f)))
+
+    @given(st.integers(2, 40), st.integers(2, 5))
+    def test_matches_ref_hypothesis(self, p, m):
+        f = jax.random.normal(jax.random.key(p * 31 + m), (p, m))
+        np.testing.assert_array_equal(np.asarray(dominance_matrix(f)),
+                                      np.asarray(dominance_matrix_ref(f)))
+
+    def test_duplicate_rows_dont_dominate(self):
+        f = jnp.asarray(np.array([[1., 2.], [1., 2.]], np.float32))
+        d = np.asarray(dominance_matrix(f))
+        assert not d.any()

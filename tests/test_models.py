@@ -1,0 +1,174 @@
+"""Model zoo: per-arch reduced smoke tests + cross-implementation
+consistency identities (the strongest correctness evidence in the suite)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as creg
+from repro.models import attention as attn_mod
+from repro.models import lm, mamba2, mlp, xlstm
+from repro.models.registry import build_model, count_params
+
+
+def _batch(cfg, b=2, s=32):
+    batch = {"inputs": jnp.arange(b * s).reshape(b, s).astype(jnp.int32) % 17 + 3,
+             "targets": jnp.ones((b, s), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = 0.1 * jnp.ones((b, cfg.encdec.enc_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patches"] = 0.1 * jnp.ones((b, cfg.vlm.n_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("name", creg.ARCH_IDS)
+class TestSmokePerArch:
+    def test_forward_train_step_no_nans(self, name):
+        cfg = creg.reduced(name)
+        api = build_model(cfg)
+        p = api.init(jax.random.key(0))
+        batch = _batch(cfg)
+        loss, metrics = jax.jit(api.loss)(p, batch)
+        assert jnp.isfinite(loss), name
+        g = jax.grad(lambda p: api.loss(p, batch)[0])(p)
+        gn = sum(float(jnp.sum(jnp.square(x.astype(jnp.float32))))
+                 for x in jax.tree.leaves(g))
+        assert np.isfinite(gn) and gn > 0, name
+
+    def test_decode_steps_finite(self, name):
+        cfg = creg.reduced(name)
+        api = build_model(cfg)
+        p = api.init(jax.random.key(0))
+        st = api.init_decode_state(2, 64)
+        if cfg.family == "audio":
+            from repro.models import whisper as wmod
+
+            frames = 0.1 * jnp.ones((2, cfg.encdec.enc_frames, cfg.d_model))
+            ck, cv = wmod.precompute_cross(p, frames, cfg)
+            st["cross_k"], st["cross_v"] = ck, cv
+        toks = jnp.array([3, 5], jnp.int32)
+        step = jax.jit(api.decode_step)
+        for _ in range(3):
+            logits, st = step(p, st, toks)
+            toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        assert logits.shape == (2, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits))), name
+
+    def test_full_config_param_count_scale(self, name):
+        """FULL configs instantiate via eval_shape only (no allocation) and
+        land in the right parameter-count ballpark."""
+        cfg = creg.get(name)
+        n = count_params(cfg)
+        expected = {
+            "arctic-480b": (4.3e11, 5.3e11),
+            "deepseek-v2-lite-16b": (1.1e10, 1.9e10),
+            "xlstm-125m": (0.8e8, 1.9e8),
+            "qwen2.5-3b": (2.4e9, 3.8e9),
+            "codeqwen1.5-7b": (6e9, 8.5e9),
+            "granite-34b": (3.0e10, 3.9e10),
+            "qwen3-8b": (6.8e9, 9.5e9),
+            "whisper-large-v3": (1.2e9, 2.2e9),
+            "zamba2-2.7b": (2.2e9, 3.4e9),
+            "paligemma-3b": (2.2e9, 3.6e9),
+        }[cfg.name]
+        assert expected[0] <= n <= expected[1], (cfg.name, n)
+
+
+class TestConsistencyIdentities:
+    def test_mamba2_chunked_equals_recurrent(self):
+        cfg = creg.reduced("zamba2_2_7b")
+        p = mamba2.init_mamba2(jax.random.key(1), cfg)
+        x = jax.random.normal(jax.random.key(2), (2, 32, cfg.d_model))
+        y_par = mamba2.mamba2_fwd(p, x, cfg)
+        st = mamba2.init_mamba2_state(cfg, 2)
+        ys = []
+        for t in range(32):
+            yt, st = mamba2.mamba2_decode(p, x[:, t], st, cfg)
+            ys.append(yt)
+        np.testing.assert_allclose(np.asarray(y_par),
+                                   np.asarray(jnp.stack(ys, 1)), atol=2e-5)
+
+    def test_mlstm_scan_equals_chunked_equals_decode(self):
+        cfg = creg.reduced("xlstm_125m")
+        p = xlstm.init_mlstm(jax.random.key(3), cfg)
+        x = jax.random.normal(jax.random.key(4), (2, 64, cfg.d_model))
+        y_scan = xlstm.mlstm_fwd(p, x, cfg)
+        y_chunk = xlstm.mlstm_fwd_chunked(p, x, cfg)
+        np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_chunk),
+                                   atol=1e-5)
+        st = xlstm.init_mlstm_state(cfg, 2)
+        ys = []
+        for t in range(64):
+            yt, st = xlstm.mlstm_decode(p, x[:, t], st, cfg)
+            ys.append(yt)
+        np.testing.assert_allclose(np.asarray(y_scan),
+                                   np.asarray(jnp.stack(ys, 1)), atol=1e-5)
+
+    def test_blockwise_attention_equals_dense(self):
+        cfg = creg.reduced("qwen3_8b")
+        p = attn_mod.init_attention(jax.random.key(5), cfg)
+        x = jax.random.normal(jax.random.key(6), (2, 64, cfg.d_model)
+                              ).astype(jnp.float32)
+        pos = jnp.arange(64)
+        from repro.models.common import causal_mask
+
+        dense = attn_mod.attention_fwd(p, x, cfg, mask=causal_mask(64),
+                                       positions=pos)
+        block = attn_mod.attention_fwd_blockwise(p, x, cfg, positions=pos,
+                                                 kv_block=16)
+        np.testing.assert_allclose(np.asarray(dense), np.asarray(block),
+                                   atol=2e-3)
+
+    def test_mla_blockwise_equals_dense(self):
+        cfg = creg.reduced("deepseek_v2_lite_16b")
+        p = attn_mod.init_mla(jax.random.key(7), cfg)
+        x = jax.random.normal(jax.random.key(8), (2, 32, cfg.d_model))
+        pos = jnp.arange(32)
+        from repro.models.common import causal_mask
+
+        dense = attn_mod.mla_fwd(p, x, cfg, mask=causal_mask(32), positions=pos)
+        block = attn_mod.mla_fwd_blockwise(p, x, cfg, positions=pos, kv_block=8)
+        np.testing.assert_allclose(np.asarray(dense), np.asarray(block),
+                                   atol=2e-3)
+
+    def test_decode_matches_teacher_forced_logits(self):
+        """Strongest identity: step-by-step decode logits == full forward
+        logits on the same token sequence (dense arch)."""
+        cfg = creg.reduced("qwen2_5_3b")
+        api = build_model(cfg)
+        p = api.init(jax.random.key(9))
+        toks = jax.random.randint(jax.random.key(10), (2, 16), 0, cfg.vocab)
+        hidden, _ = lm.lm_hidden(p, toks, cfg)
+        full_logits = lm.lm_logits(p, hidden, cfg)
+        st = api.init_decode_state(2, 16)
+        outs = []
+        for t in range(16):
+            lg, st = api.decode_step(p, st, toks[:, t])
+            outs.append(lg)
+        dec_logits = jnp.stack(outs, 1)
+        np.testing.assert_allclose(np.asarray(dec_logits),
+                                   np.asarray(full_logits.astype(jnp.float32)),
+                                   atol=0.05, rtol=0.05)
+
+    def test_moe_groupwise_close_to_dropfree(self):
+        cfg = creg.reduced("arctic_480b")
+        p = mlp.init_moe(jax.random.key(11), cfg.d_model, cfg)
+        x = 0.5 * jax.random.normal(jax.random.key(12), (2, 64, cfg.d_model))
+        y_g, aux = mlp.moe_fwd(p, x, cfg)
+        y_d = mlp.moe_fwd_dense_eval(p, x, cfg)
+        # capacity dropping may zero a few tokens; most must agree
+        diff = jnp.linalg.norm((y_g - y_d).reshape(-1, cfg.d_model), axis=-1)
+        base = jnp.linalg.norm(y_d.reshape(-1, cfg.d_model), axis=-1) + 1e-6
+        frac_close = float(jnp.mean((diff / base) < 1e-3))
+        assert frac_close > 0.85
+        assert jnp.isfinite(aux)
+
+    def test_moe_aux_loss_balanced_router_is_one(self):
+        """With a uniform router, the Switch LB loss -> ~aux_weight."""
+        cfg = creg.reduced("arctic_480b")
+        m = cfg.moe
+        p = mlp.init_moe(jax.random.key(13), cfg.d_model, cfg)
+        p = dict(p, router=jnp.zeros_like(p["router"]))
+        x = jax.random.normal(jax.random.key(14), (2, 64, cfg.d_model))
+        _, aux = mlp.moe_fwd(p, x, cfg)
+        assert float(aux) < 3 * m.router_aux_weight

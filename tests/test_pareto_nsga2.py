@@ -1,0 +1,124 @@
+"""Pareto utilities + NSGA-II: hypothesis properties and ground-truth
+front recovery against exhaustive enumeration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import explorer, nsga2, pareto
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def objs(draw_rows):
+    return jnp.asarray(np.array(draw_rows, np.float32))
+
+
+@st.composite
+def objective_sets(draw):
+    p = draw(st.integers(3, 24))
+    m = draw(st.integers(2, 4))
+    rows = draw(st.lists(
+        st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                 min_size=m, max_size=m), min_size=p, max_size=p))
+    return np.array(rows, np.float32)
+
+
+class TestDominance:
+    @given(objective_sets())
+    def test_irreflexive(self, f):
+        d = np.asarray(pareto.dominance_matrix(jnp.asarray(f)))
+        assert not d.diagonal().any()
+
+    @given(objective_sets())
+    def test_antisymmetric(self, f):
+        d = np.asarray(pareto.dominance_matrix(jnp.asarray(f)))
+        assert not (d & d.T).any()
+
+    @given(objective_sets())
+    def test_transitive(self, f):
+        d = np.asarray(pareto.dominance_matrix(jnp.asarray(f)))
+        viol = (d.astype(int) @ d.astype(int) > 0) & ~d
+        # i dom j, j dom k => i dom k  (true for Pareto dominance)
+        assert not viol.any()
+
+    @given(objective_sets())
+    def test_rank_zero_iff_nondominated(self, f):
+        fj = jnp.asarray(f)
+        ranks = np.asarray(pareto.non_dominated_rank(fj))
+        nd = np.asarray(pareto.non_dominated_mask(fj))
+        assert ((ranks == 0) == nd).all()
+
+    @given(objective_sets())
+    def test_rank_matches_bruteforce_peeling(self, f):
+        fj = jnp.asarray(f)
+        ranks = np.asarray(pareto.non_dominated_rank(fj))
+        # brute force peeling
+        remaining = list(range(len(f)))
+        expect = np.zeros(len(f), int)
+        level = 0
+        while remaining:
+            sub = f[remaining]
+            d = np.asarray(pareto.dominance_matrix(jnp.asarray(sub)))
+            front = [remaining[i] for i in range(len(remaining))
+                     if not d[:, i].any()]
+            for i in front:
+                expect[i] = level
+                remaining.remove(i)
+            level += 1
+        assert (ranks == expect).all()
+
+    def test_crowding_boundaries_infinite(self):
+        f = jnp.asarray(np.array([[0., 5.], [1., 4.], [2., 3.], [3., 2.]],
+                                 np.float32))
+        ranks = pareto.non_dominated_rank(f)
+        crowd = np.asarray(pareto.crowding_distance(f, ranks))
+        assert crowd[0] > 1e20 and crowd[-1] > 1e20
+        assert np.all(crowd[1:-1] < 1e20)
+
+    def test_constrained_dominance_feasible_beats_infeasible(self):
+        f = jnp.asarray(np.array([[5., 5.], [0., 0.]], np.float32))
+        cv = jnp.asarray(np.array([0.0, 2.0], np.float32))
+        d = np.asarray(pareto.constrained_dominance_matrix(f, cv))
+        assert d[0, 1] and not d[1, 0]
+
+
+class TestNSGA2:
+    def test_recovers_true_front_16kb(self):
+        genes, objs_all = explorer.full_design_space(16384)
+        true_front_mask = np.asarray(pareto.non_dominated_mask(objs_all))
+        true_front = {tuple(g) for g, m in
+                      zip(np.asarray(genes), true_front_mask) if m}
+        res = explorer.explore(16384, pop_size=192, generations=60, seed=3)
+        found = {(int(np.log2(s.h)), int(np.log2(s.l)), s.b_adc)
+                 for s in res.specs}
+        # every found point is truly non-dominated...
+        assert found <= true_front
+        # ...and covers most of the true front
+        assert len(found) >= 0.6 * len(true_front)
+
+    def test_population_always_feasible(self):
+        cfg = nsga2.NSGA2Config(array_size=16384, pop_size=64, generations=10)
+        pop = nsga2.run(cfg)
+        cv = np.asarray(nsga2.constraint_violation(pop.genes, cfg))
+        assert (cv == 0).all()
+        g = np.asarray(pop.genes)
+        h_lo, h_hi = cfg.h_exp_bounds
+        assert (g[:, 0] >= h_lo).all() and (g[:, 0] <= h_hi).all()
+        assert (g[:, 2] >= 1).all() and (g[:, 2] <= (g[:, 0] - g[:, 1])).all()
+
+    def test_repair_projects_into_feasible_set(self):
+        cfg = nsga2.NSGA2Config(array_size=16384)
+        bad = jnp.asarray(np.array([[20, 9, 9], [4, 7, 8], [6, 1, 0]], np.int32))
+        fixed = np.asarray(nsga2.repair(bad, cfg))
+        cv = np.asarray(nsga2.constraint_violation(jnp.asarray(fixed), cfg))
+        assert (cv == 0).all()
+        assert (fixed[:, 2] >= 1).all()
+
+    def test_agile_filter(self):
+        res = explorer.explore(16384, pop_size=96, generations=25, seed=5)
+        filt = res.filter(min_tops=0.5)
+        assert all(m >= 0.5 for m in filt.metrics["tops"])
+        assert len(filt) <= len(res)

@@ -1,0 +1,170 @@
+"""Optimizer, data pipeline, checkpoint, serving, compression."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import registry as creg
+from repro.data.synthetic import DataConfig, SyntheticStream, batch_for
+from repro.optim import adamw
+from repro.runtime import compression
+from repro.serve.engine import Request, ServeEngine
+
+
+class TestAdamW:
+    def _opt_run(self, cfg, steps=120):
+        w = jnp.array([2.0, -3.0, 5.0])
+        params = {"w": w}
+        opt = adamw.init(params, cfg)
+        target = jnp.array([0.5, 0.5, 0.5])
+        for _ in range(steps):
+            g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+            params, opt, _ = adamw.update(g, opt, params, cfg)
+        return float(jnp.sum((params["w"] - target) ** 2))
+
+    def test_quadratic_convergence(self):
+        assert self._opt_run(adamw.AdamWConfig(lr=5e-2, weight_decay=0.0,
+                                               warmup_steps=5,
+                                               total_steps=1000)) < 0.05
+
+    def test_quantized_moments_track_f32(self):
+        base = self._opt_run(adamw.AdamWConfig(lr=5e-2, weight_decay=0.0,
+                                               warmup_steps=5, total_steps=1000))
+        q = self._opt_run(adamw.AdamWConfig(lr=5e-2, weight_decay=0.0,
+                                            warmup_steps=5, total_steps=1000,
+                                            quantized_moments=True,
+                                            quant_block=2))
+        assert q < 0.2 and abs(q - base) < 0.2
+
+    def test_blockwise_quant_roundtrip(self):
+        x = jax.random.normal(jax.random.key(0), (7, 300))
+        q, s = adamw.quantize_blockwise(x, 64)
+        y = adamw.dequantize_blockwise(q, s, 64)
+        err = jnp.abs(y - x)
+        bound = jnp.repeat(s, 64, axis=-1)[..., :300] * 0.5 + 1e-9
+        assert bool(jnp.all(err <= bound * 1.01))
+
+    def test_clip_and_schedule(self):
+        cfg = adamw.AdamWConfig(clip_norm=1.0, warmup_steps=10, total_steps=100)
+        assert float(adamw.schedule(cfg, jnp.int32(0))) == 0.0
+        assert float(adamw.schedule(cfg, jnp.int32(10))) == pytest.approx(cfg.lr)
+        assert float(adamw.schedule(cfg, jnp.int32(100))) == pytest.approx(
+            cfg.lr * cfg.min_lr_ratio, rel=1e-3)
+
+    def test_scanned_update_matches_plain(self):
+        key = jax.random.key(1)
+        p = {"w": jax.random.normal(key, (8, 64, 32))}
+        g = {"w": jax.random.normal(jax.random.key(2), (8, 64, 32))}
+        cfg_plain = adamw.AdamWConfig(scan_update_threshold=1 << 40)
+        cfg_scan = adamw.AdamWConfig(scan_update_threshold=1)
+        o1 = adamw.init(p, cfg_plain)
+        o2 = adamw.init(p, cfg_scan)
+        p1, _, _ = adamw.update(g, o1, p, cfg_plain)
+        p2, _, _ = adamw.update(g, o2, p, cfg_scan)
+        np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]),
+                                   rtol=1e-6)
+
+
+class TestData:
+    def test_deterministic_and_stateless(self):
+        cfg = DataConfig(vocab=101, seq=16, global_batch=4)
+        s1 = SyntheticStream(cfg)
+        s2 = SyntheticStream(cfg)
+        b1 = s1.global_batch(7)
+        b2 = s2.global_batch(7)
+        np.testing.assert_array_equal(np.asarray(b1["inputs"]),
+                                      np.asarray(b2["inputs"]))
+        b3 = s1.global_batch(8)
+        assert not np.array_equal(np.asarray(b1["inputs"]),
+                                  np.asarray(b3["inputs"]))
+
+    def test_host_sharding_partitions(self):
+        cfg = DataConfig(vocab=101, seq=8, global_batch=8)
+        s = SyntheticStream(cfg)
+        full = s.global_batch(3)
+        parts = [s.host_batch(3, process_index=i, process_count=4)
+                 for i in range(4)]
+        recon = np.concatenate([np.asarray(p["inputs"]) for p in parts])
+        np.testing.assert_array_equal(recon, np.asarray(full["inputs"]))
+
+    def test_learnable_structure(self):
+        cfg = DataConfig(vocab=101, seq=256, global_batch=2, markov_period=64)
+        b = SyntheticStream(cfg).global_batch(0)
+        toks = np.asarray(b["inputs"])[0]
+        copies = (toks[64:] == toks[:-64]).mean()
+        # copy prob 0.5 applied to the base stream: observable match rate
+        # ~P(copy_t)*P(!copy_{t-64}) + collisions ~= 0.3+
+        assert copies > 0.3
+
+    def test_family_batches(self):
+        cfg = creg.reduced("whisper_large_v3")
+        b = batch_for(cfg, 16, 2, 0)
+        assert b["frames"].shape == (2, cfg.encdec.enc_frames, cfg.d_model)
+
+
+class TestCheckpoint:
+    def test_roundtrip_bitwise(self, tmp_path):
+        tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                "b": {"c": jnp.ones((2,), jnp.bfloat16),
+                      "d": jnp.int32(7)}}
+        ckpt.save(tmp_path, 5, tree)
+        assert ckpt.latest_step(tmp_path) == 5
+        struct = jax.eval_shape(lambda: tree)
+        out = ckpt.restore(tmp_path, 5, struct)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_atomicity_pointer(self, tmp_path):
+        tree = {"x": jnp.zeros((4,))}
+        ckpt.save(tmp_path, 1, tree)
+        ckpt.save(tmp_path, 2, tree)
+        assert ckpt.latest_step(tmp_path) == 2
+        # simulate a torn LATEST pointing at a missing dir
+        (pathlib.Path(tmp_path) / "LATEST").write_text("step_00000099")
+        assert ckpt.latest_step(tmp_path) == 2
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        ckpt.save(tmp_path, 1, {"x": jnp.zeros((4,))})
+        with pytest.raises(ValueError):
+            ckpt.restore(tmp_path, 1, jax.eval_shape(lambda: {"y": jnp.zeros((4,))}))
+
+
+class TestCompression:
+    def test_error_feedback_unbiased_accumulation(self):
+        key = jax.random.key(3)
+        g = jax.random.normal(key, (1024,))
+        ef = jnp.zeros((1024,))
+        total_sent = jnp.zeros((1024,))
+        for i in range(20):
+            deq, ef = compression.compress_decompress(g, ef, block=128)
+            total_sent = total_sent + deq
+        # sum of sent messages ~= 20*g  (error feedback closes the gap)
+        rel = float(jnp.linalg.norm(total_sent - 20 * g)
+                    / jnp.linalg.norm(20 * g))
+        assert rel < 0.01
+
+    def test_compression_ratio(self):
+        # int8 + per-128 f32 scale: 8.25 bits/elem vs 32
+        assert (8 * 1 + 32 / 128) / 32 < 0.27
+
+
+class TestServeEngine:
+    def test_completes_requests_greedy_deterministic(self):
+        cfg = creg.reduced("qwen2_5_3b")
+        from repro.models.registry import build_model
+
+        api = build_model(cfg)
+        params = api.init(jax.random.key(0))
+        eng = ServeEngine(cfg, params, slots=2, max_seq=64)
+        for uid in range(4):
+            eng.submit(Request(uid=uid, prompt=[5, 7, 9], max_new=4))
+        done = eng.run(max_steps=128)
+        assert len(done) == 4
+        outs = {c.uid: c.tokens for c in done}
+        assert all(len(t) == 4 for t in outs.values())
+        # same prompt => same greedy continuation (continuous batching note:
+        # later slots start deeper in the cache; uid 0/1 run in parallel)
+        assert outs[0] == outs[1]
