@@ -11,7 +11,9 @@ import numpy as np
 
 from repro.core.acim_spec import MacroSpec
 from repro.kernels.acim_matmul import acim_matmul, acim_matmul_ref
-from repro.kernels.pareto_dom import dominance_matrix, dominance_matrix_ref
+from repro.kernels.pareto_dom import (dominance_matrix, dominance_matrix_ref,
+                                      non_dominated_rank,
+                                      non_dominated_rank_ref)
 
 
 def _time(fn, *args, reps: int = 3) -> float:
@@ -39,6 +41,11 @@ def main() -> None:
     t_r = _time(lambda a: dominance_matrix_ref(a), f)
     print(f"pareto_dom_pallas_interp,{t_k:.0f},(P=512 M=4)")
     print(f"pareto_dom_ref,{t_r:.0f},oracle")
+
+    t_k = _time(lambda a: non_dominated_rank(a), f)
+    t_r = _time(lambda a: non_dominated_rank_ref(a), f)
+    print(f"pareto_rank_fused_pallas_interp,{t_k:.0f},(P=512 M=4 bit-packed peel)")
+    print(f"pareto_rank_ref,{t_r:.0f},oracle")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ A     (Eq. 10): A_SRAM + A_LC/L + A_COMP/H + B*A_DFF/H   [F^2/bit].
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -189,15 +190,95 @@ def area_f2_per_bit(h, l, b_adc, cal: CalibConstants = CAL28):
 # Objective stack (Eq. 12): minimize [-f_SNR, -f_T, f_E, f_A]
 # ----------------------------------------------------------------------
 def objectives(h, w, l, b_adc, cal: CalibConstants = CAL28) -> Array:
-    """Stack the four objectives, minimization orientation, shape (..., 4)."""
-    snr = snr_total_db(h, l, b_adc, cal)
-    tops = throughput_ops(h, w, l, b_adc, cal) / 1e12
-    e = energy_per_mac_fj(h, l, b_adc, cal)
-    a = area_f2_per_bit(h, l, b_adc, cal)
-    return jnp.stack([-snr, -tops, e, a], axis=-1)
+    """Stack the four objectives, minimization orientation, shape (..., 4).
+
+    Delegates to `objectives_from_operands` so the Eqs. 2-11 physics exists
+    in exactly one place (the operand-traced form the explorers compile)."""
+    return objectives_from_operands(h, w, l, b_adc, cal_operands(cal))
 
 
 OBJECTIVE_NAMES = ("neg_snr_db", "neg_tops", "energy_fj_per_mac", "area_f2_per_bit")
+
+
+# ----------------------------------------------------------------------
+# Traced calibration operands (one-compile sweep support)
+# ----------------------------------------------------------------------
+class CalOperands(NamedTuple):
+    """Calibration constants as traced f32 scalars.
+
+    `objectives()` closes over a static `CalibConstants`, so every distinct
+    calibration (and, upstream, every distinct array size) forces a retrace.
+    `CalOperands` carries the same physics as *operand* arrays: the batched
+    explorer vmaps one compiled program over a stack of these.  Design-point
+    independent combinations (the pre-ADC inverse SNR, the ADC dB offset)
+    are folded on the host so the traced math stays minimal.
+    """
+
+    inv_pre: Array        # 1/SNR_a + 1/SQNR_i (linear; N-independent, Eqs. 3-5)
+    adc_off_db: Array     # 4.8 - zeta_x_dB - zeta_w_dB  (Eq. 6 constant)
+    t_com: Array          # [s]
+    t_set_per_b: Array    # 0.69 * tau [s/bit]
+    t_conv_bit: Array     # [s/bit]
+    e_cc_fj: Array        # E_compute + E_control [fJ]
+    k1_fj: Array
+    k2_fj: Array
+    log2_vdd: Array
+    vdd2: Array
+    a_sram: Array
+    a_lc: Array
+    a_comp: Array
+    a_dff: Array
+
+
+def cal_operands(cal: CalibConstants = CAL28) -> CalOperands:
+    """Fold a static `CalibConstants` into traced scalar operands."""
+    n_probe = jnp.float32(1.0)  # SNR_a and SQNR_i are N-independent (see Eq. 5)
+    inv_pre = 1.0 / snr_analog(n_probe, cal) + 1.0 / sqnr_input(n_probe, cal)
+    f32 = lambda v: jnp.float32(v)  # noqa: E731
+    return CalOperands(
+        inv_pre=jnp.reshape(inv_pre, ()).astype(jnp.float32),
+        adc_off_db=f32(4.8 - cal.zeta_x_db - cal.zeta_w_db),
+        t_com=f32(cal.t_com),
+        t_set_per_b=f32(0.69 * cal.tau),
+        t_conv_bit=f32(cal.t_conv_bit),
+        e_cc_fj=f32(cal.e_cc_fj),
+        k1_fj=f32(cal.k1_fj),
+        k2_fj=f32(cal.k2_fj),
+        log2_vdd=f32(np.log2(cal.v_dd)),
+        vdd2=f32(cal.v_dd**2),
+        a_sram=f32(cal.a_sram),
+        a_lc=f32(cal.a_lc),
+        a_comp=f32(cal.a_comp),
+        a_dff=f32(cal.a_dff),
+    )
+
+
+def objectives_from_operands(h, w, l, b_adc, ops: CalOperands) -> Array:
+    """Eq. 12 objective stack with *traced* calibration operands.
+
+    Same model as `objectives()` (Eqs. 2-11) but every constant is an
+    operand, so one compiled program serves any (array size, calibration)
+    batch.  Shapes broadcast: scalar operands with (...,) design points, or
+    leading batch dims on both under `vmap`.
+    """
+    h = jnp.asarray(h, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    l = jnp.asarray(l, jnp.float32)
+    b = jnp.asarray(b_adc, jnp.float32)
+    n = h / l
+    # SNR_T (Eqs. 2-6): pre-ADC inverse SNR is a folded constant.
+    sqnr_y_db = 6.0 * b + ops.adc_off_db - 10.0 * jnp.log10(n)
+    sqnr_y = 10.0 ** (sqnr_y_db / 10.0)
+    snr_db = 10.0 * jnp.log10(1.0 / (ops.inv_pre + 1.0 / sqnr_y))
+    # Throughput (Eq. 7), TOPS.
+    t_cycle = ops.t_com + ops.t_set_per_b * b + ops.t_conv_bit * b
+    tops = 2.0 * n * w / t_cycle / 1e12
+    # Energy (Eqs. 8-9), fJ per 1b MAC.
+    e_adc = ops.k1_fj * (b + ops.log2_vdd) + ops.k2_fj * 4.0**b * ops.vdd2
+    e = ops.e_cc_fj + e_adc / n
+    # Area (Eq. 10), F^2/bit.
+    a = ops.a_sram + ops.a_lc / l + ops.a_comp / h + b * ops.a_dff / h
+    return jnp.stack([-snr_db, -tops, e, a], axis=-1)
 
 
 def evaluate_report(h, w, l, b_adc, cal: CalibConstants = CAL28) -> dict:

@@ -7,6 +7,14 @@ paper's "agile interaction": users prune the frontier with application
 requirements (min SNR, min throughput, max energy, max area) before handing
 the survivors to the netlist generator / placer / router
 (`repro.eda.flow.generate_layout`).
+
+One-compile sweep contract: `explore()` and `explore_sizes()` are thin
+wrappers over `repro.core.batched_explorer.explore_batch` — the array size,
+gene bounds, and calibration constants are traced operands of a single
+compiled NSGA-II program (`repro.core.nsga2.run_cell`), so a whole
+(array_size x seed) sweep is one trace, one compile, and one device
+dispatch.  The per-cell fronts are identical to the sequential
+`nsga2.run` reference path.
 """
 from __future__ import annotations
 
@@ -75,19 +83,11 @@ def _dedup_pareto(genes: np.ndarray, objs: np.ndarray):
     return uniq[mask], objs_u[mask]
 
 
-def explore(array_size: int, *, pop_size: int = 256, generations: int = 80,
-            seed: int = 0, cal: CalibConstants = CAL28,
-            use_pallas_dominance: bool = False) -> ParetoResult:
-    """Run the MOGA explorer for one array size (paper: < 30 min on a Xeon;
-    here: seconds, thanks to the fully vectorized generation step)."""
-    cfg = nsga2.NSGA2Config(array_size=array_size, pop_size=pop_size,
-                            generations=generations, seed=seed, cal=cal,
-                            use_pallas_dominance=use_pallas_dominance)
-    popu = nsga2.run(cfg)
-    genes = np.asarray(popu.genes)
-    objs = np.asarray(popu.objs)
-    genes, _ = _dedup_pareto(genes, objs)
-
+def pareto_result_from_population(array_size: int, genes: np.ndarray,
+                                  objs: np.ndarray,
+                                  cal: CalibConstants = CAL28) -> ParetoResult:
+    """Distill a final NSGA-II population into a `ParetoResult`."""
+    genes, _ = _dedup_pareto(np.asarray(genes), np.asarray(objs))
     h = (2 ** genes[:, 0]).astype(np.int64)
     w = (array_size // h).astype(np.int64)
     l = (2 ** genes[:, 1]).astype(np.int64)
@@ -100,9 +100,31 @@ def explore(array_size: int, *, pop_size: int = 256, generations: int = 80,
     return ParetoResult(array_size, specs, metrics)
 
 
-def explore_sizes(sizes=(4096, 16384, 65536), **kw) -> dict[int, ParetoResult]:
-    """Fig. 9(a)(b)-style sweep over array sizes."""
-    return {s: explore(s, **kw) for s in sizes}
+def explore(array_size: int, *, pop_size: int = 256, generations: int = 80,
+            seed: int = 0, cal: CalibConstants = CAL28,
+            use_pallas_dominance: bool = False,
+            use_pallas_rank: bool = False) -> ParetoResult:
+    """Run the MOGA explorer for one array size (paper: < 30 min on a Xeon;
+    here: seconds, thanks to the fully vectorized generation step).
+
+    Thin wrapper over `explore_batch` with a single (size, seed) cell."""
+    from repro.core.batched_explorer import explore_batch
+
+    out = explore_batch((array_size,), (seed,), pop_size=pop_size,
+                        generations=generations, cal=cal,
+                        use_pallas_dominance=use_pallas_dominance,
+                        use_pallas_rank=use_pallas_rank)
+    return out[(array_size, seed)]
+
+
+def explore_sizes(sizes=(4096, 16384, 65536), *, seed: int = 0,
+                  **kw) -> dict[int, ParetoResult]:
+    """Fig. 9(a)(b)-style sweep over array sizes — one compiled program
+    covers the whole sweep (see `repro.core.batched_explorer`)."""
+    from repro.core.batched_explorer import explore_batch
+
+    out = explore_batch(tuple(sizes), (seed,), **kw)
+    return {s: out[(int(s), seed)] for s in sizes}
 
 
 def full_design_space(array_size: int, cal: CalibConstants = CAL28):

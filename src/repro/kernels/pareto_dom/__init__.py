@@ -1,4 +1,9 @@
-from repro.kernels.pareto_dom.ops import dominance_matrix
-from repro.kernels.pareto_dom.ref import dominance_matrix_ref
+from repro.kernels.pareto_dom.ops import (dominance_matrix,
+                                          non_dominated_rank, rank_and_crowd)
+from repro.kernels.pareto_dom.ref import (crowding_distance_ref,
+                                          dominance_matrix_ref,
+                                          non_dominated_rank_ref)
 
-__all__ = ["dominance_matrix", "dominance_matrix_ref"]
+__all__ = ["dominance_matrix", "non_dominated_rank", "rank_and_crowd",
+           "dominance_matrix_ref", "non_dominated_rank_ref",
+           "crowding_distance_ref"]

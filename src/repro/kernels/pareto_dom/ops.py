@@ -1,18 +1,31 @@
-"""Public wrapper: pads the population to the tile size and strips it back.
+"""Public wrappers: pad the population to the tile size and strip it back.
 
 Pad rows are +inf in every objective: they dominate nothing and real points
 dominating them is irrelevant after slicing, so correctness is unaffected.
+For the fused rank path the +inf rows are dominated by every real point and
+therefore peel strictly after them — the real prefix of the rank vector is
+exactly the unpadded sort.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.pareto_dom.kernel import dominance_matrix_kernel
+from repro.core import pareto
+from repro.kernels.pareto_dom.kernel import (dominance_matrix_kernel,
+                                             nds_rank_kernel)
 
 
 def _should_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _pad_inf(f: jax.Array, multiple: int) -> jax.Array:
+    p, m = f.shape
+    pad = (-p) % multiple
+    if pad:
+        f = jnp.concatenate([f, jnp.full((pad, m), jnp.inf, f.dtype)], 0)
+    return f
 
 
 def dominance_matrix(f: jax.Array, *, block: int = 256,
@@ -22,8 +35,33 @@ def dominance_matrix(f: jax.Array, *, block: int = 256,
         interpret = _should_interpret()
     p, m = f.shape
     block = min(block, max(8, p))
-    pad = (-p) % block
-    if pad:
-        f = jnp.concatenate([f, jnp.full((pad, m), jnp.inf, f.dtype)], 0)
+    f = _pad_inf(f, block)
     d = dominance_matrix_kernel(f.T, block=block, interpret=interpret)
     return d[:p, :p].astype(jnp.bool_)
+
+
+def non_dominated_rank(f: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """Fused Pallas fast non-dominated sort: (P, M) -> (P,) int32 ranks.
+
+    Dominance tiles are built and bit-packed in VMEM and fronts are peeled
+    on-device — the (P, P) matrix never exists in f32 nor reaches HBM.
+    Oracle: `repro.core.pareto.non_dominated_rank`.
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    p, _ = f.shape
+    ranks = nds_rank_kernel(_pad_inf(f, 256), interpret=interpret)
+    return ranks[:p]
+
+
+def rank_and_crowd(f: jax.Array, *, interpret: bool | None = None):
+    """Fused rank-and-crowd path: Pallas peel + vectorized crowding.
+
+    Drop-in replacement for the separate
+    `pareto.non_dominated_rank` / `pareto.crowding_distance` pair in the
+    NSGA-II generation step (`repro.core.nsga2.rank_and_crowd` selects it
+    via `use_pallas_rank`).
+    """
+    ranks = non_dominated_rank(f, interpret=interpret)
+    crowd = pareto.crowding_distance(f, ranks)
+    return ranks, crowd

@@ -1,4 +1,7 @@
-"""Pure-jnp oracle for the pareto_dom kernel: `repro.core.pareto.dominance_matrix`."""
+"""Pure-jnp oracles for the pareto_dom kernels (`repro.core.pareto`)."""
+from repro.core.pareto import crowding_distance as crowding_distance_ref
 from repro.core.pareto import dominance_matrix as dominance_matrix_ref
+from repro.core.pareto import non_dominated_rank as non_dominated_rank_ref
 
-__all__ = ["dominance_matrix_ref"]
+__all__ = ["dominance_matrix_ref", "non_dominated_rank_ref",
+           "crowding_distance_ref"]

@@ -7,8 +7,12 @@ independent NSGA-II population (different seed / array size), with
 periodic migration of Pareto elites — embarrassingly parallel evaluation
 (the estimator is a closed-form vmap) plus one small all-gather per
 migration round.  Implemented with shard_map over the flattened mesh; the
-per-device program is the same jit generation step the single-device
-explorer uses.
+per-device program is the same operand-traced `run_cell`/`evolve_from`
+step the single-device and batched explorers use, so the island sweep
+shares their one-compile contract: `run_round` and `evolve` are each
+traced exactly once, regardless of the number of migration rounds (the
+seed implementation re-defined — and therefore re-traced — the evolve
+closure inside the round loop).
 
 This is the "agile exploration" story at framework scale: one pod sweep
 covers every (array size x seed x SNR-floor) cell a deployment would ask
@@ -25,6 +29,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import nsga2, pareto
+from repro.parallel.axes import shard_map
 from repro.core.constants import CAL28
 
 
@@ -43,31 +48,36 @@ def explore_islands(mesh: Mesh, array_size: int, *, pop_size: int = 64,
     """
     cfg = nsga2.NSGA2Config(array_size=array_size, pop_size=pop_size,
                             generations=migrate_every, cal=cal)
+    statics = nsga2.EvolveStatics.from_config(cfg)
+    space = nsga2.space_operands(cfg)
     n_dev = int(np.prod(list(mesh.shape.values())))
     axes = _axis_names(mesh)
     spec_island = P(axes)          # leading dim sharded over all axes
+    spec_repl = P()                # design-space operands: replicated
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, check_vma=False,
-        in_specs=(spec_island,), out_specs=(spec_island, spec_island))
-    def run_round(keys):
-        key = keys[0]              # this island's key
-        kinit, kgen = jax.random.split(key)
-        genes = nsga2.init_population(kinit, cfg)
-        objs = nsga2.evaluate(genes, cfg)
-
-        def body(i, state):
-            k, g, o = state
-            k, sub = jax.random.split(k)
-            g, o = nsga2.generation_step(sub, g, o, cfg)
-            return k, g, o
-
-        _, genes, objs = jax.lax.fori_loop(0, cfg.generations, body,
-                                           (kgen, genes, objs))
+        shard_map, mesh=mesh, check_vma=False,
+        in_specs=(spec_island, spec_repl),
+        out_specs=(spec_island, spec_island))
+    def run_round(keys, space):
+        genes, objs = nsga2.run_cell(keys[0], space, statics=statics,
+                                     n_gens=cfg.generations)
         return genes[None], objs[None]
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, check_vma=False,
+        shard_map, mesh=mesh, check_vma=False,
+        in_specs=(spec_island, spec_island, spec_island, spec_repl),
+        out_specs=(spec_island, spec_island))
+    def evolve(keys, genes, objs, space):
+        """Continue evolving migrated populations (defined ONCE, traced
+        once; the migrated population is re-ranked a single time at entry
+        via `evolve_from`)."""
+        g, o = nsga2.evolve_from(keys[0], genes[0], objs[0], space, statics,
+                                 cfg.generations)
+        return g[None], o[None]
+
+    @functools.partial(
+        shard_map, mesh=mesh, check_vma=False,
         in_specs=(spec_island, spec_island, spec_island),
         out_specs=(spec_island, spec_island))
     def migrate(keys, genes, objs):
@@ -92,35 +102,16 @@ def explore_islands(mesh: Mesh, array_size: int, *, pop_size: int = 64,
         o = o.at[order[-n_mig:]].set(all_o[pick])
         return g[None], o[None]
 
-    base = jax.random.split(jax.random.key(seed), n_dev)
-    keys = jax.device_put(base, NamedSharding(mesh, spec_island))
+    def _island_keys(s: int):
+        k = jax.random.split(jax.random.key(s), n_dev)
+        return jax.device_put(k, NamedSharding(mesh, spec_island))
+
     rounds = max(1, generations // migrate_every)
-    genes, objs = run_round(keys)
+    genes, objs = run_round(_island_keys(seed), space)
     for r in range(rounds - 1):
-        mk = jax.random.split(jax.random.key(seed + 1000 + r), n_dev)
-        mk = jax.device_put(mk, NamedSharding(mesh, spec_island))
-        genes, objs = migrate(mk, genes, objs)
+        genes, objs = migrate(_island_keys(seed + 1000 + r), genes, objs)
         # continue evolving from migrated populations
-
-        @functools.partial(
-            jax.shard_map, mesh=mesh, check_vma=False,
-            in_specs=(spec_island, spec_island, spec_island),
-            out_specs=(spec_island, spec_island))
-        def evolve(keys, genes, objs):
-            key, g, o = keys[0], genes[0], objs[0]
-
-            def body(i, state):
-                k, gg, oo = state
-                k, sub = jax.random.split(k)
-                gg, oo = nsga2.generation_step(sub, gg, oo, cfg)
-                return k, gg, oo
-
-            _, g, o = jax.lax.fori_loop(0, cfg.generations, body, (key, g, o))
-            return g[None], o[None]
-
-        ek = jax.random.split(jax.random.key(seed + 2000 + r), n_dev)
-        ek = jax.device_put(ek, NamedSharding(mesh, spec_island))
-        genes, objs = evolve(ek, genes, objs)
+        genes, objs = evolve(_island_keys(seed + 2000 + r), genes, objs, space)
 
     g = np.asarray(jax.device_get(genes)).reshape(-1, 3)
     o = np.asarray(jax.device_get(objs)).reshape(-1, 4)

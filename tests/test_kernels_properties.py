@@ -1,0 +1,53 @@
+"""Hypothesis property sweeps for the Pallas kernels (interpret mode).
+
+Collected only where hypothesis is installed (`pytest.importorskip`);
+deterministic kernel coverage lives in `test_kernels.py`."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import pareto  # noqa: E402
+from repro.core.acim_spec import MacroSpec  # noqa: E402
+from repro.kernels.acim_matmul import acim_matmul, acim_matmul_ref  # noqa: E402
+from repro.kernels.pareto_dom import (dominance_matrix,  # noqa: E402
+                                      dominance_matrix_ref,
+                                      non_dominated_rank)
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _pm1(key, shape):
+    return jnp.where(jax.random.bernoulli(jax.random.key(key), 0.5, shape),
+                     1.0, -1.0)
+
+
+class TestAcimMatmulProperties:
+    @given(st.integers(1, 33), st.integers(1, 200), st.integers(1, 17),
+           st.sampled_from([64, 128, 256]), st.integers(1, 6))
+    def test_kernel_matches_ref_hypothesis(self, m, k, c, n, b):
+        x = _pm1(m + k, (m, k))
+        w = _pm1(k + c, (k, c))
+        spec = MacroSpec(h=2 * n, w=c, l=2, b_adc=b)
+        np.testing.assert_array_equal(
+            np.asarray(acim_matmul(x, w, spec)),
+            np.asarray(acim_matmul_ref(x, w, n=n, b_adc=b)))
+
+
+class TestParetoDomProperties:
+    @given(st.integers(2, 40), st.integers(2, 5))
+    def test_matches_ref_hypothesis(self, p, m):
+        f = jax.random.normal(jax.random.key(p * 31 + m), (p, m))
+        np.testing.assert_array_equal(np.asarray(dominance_matrix(f)),
+                                      np.asarray(dominance_matrix_ref(f)))
+
+    @given(st.integers(2, 40), st.integers(2, 5))
+    def test_fused_rank_matches_ref_hypothesis(self, p, m):
+        f = jax.random.normal(jax.random.key(p * 13 + m), (p, m))
+        np.testing.assert_array_equal(
+            np.asarray(non_dominated_rank(f)),
+            np.asarray(pareto.non_dominated_rank(f)))

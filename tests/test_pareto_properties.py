@@ -1,0 +1,70 @@
+"""Hypothesis property tests for the Pareto utilities.
+
+Collected only where hypothesis is installed (`pytest.importorskip`);
+deterministic Pareto/NSGA-II coverage lives in `test_pareto_nsga2.py`."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import pareto  # noqa: E402
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def objective_sets(draw):
+    p = draw(st.integers(3, 24))
+    m = draw(st.integers(2, 4))
+    rows = draw(st.lists(
+        st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                 min_size=m, max_size=m), min_size=p, max_size=p))
+    return np.array(rows, np.float32)
+
+
+class TestDominanceProperties:
+    @given(objective_sets())
+    def test_irreflexive(self, f):
+        d = np.asarray(pareto.dominance_matrix(jnp.asarray(f)))
+        assert not d.diagonal().any()
+
+    @given(objective_sets())
+    def test_antisymmetric(self, f):
+        d = np.asarray(pareto.dominance_matrix(jnp.asarray(f)))
+        assert not (d & d.T).any()
+
+    @given(objective_sets())
+    def test_transitive(self, f):
+        d = np.asarray(pareto.dominance_matrix(jnp.asarray(f)))
+        viol = (d.astype(int) @ d.astype(int) > 0) & ~d
+        # i dom j, j dom k => i dom k  (true for Pareto dominance)
+        assert not viol.any()
+
+    @given(objective_sets())
+    def test_rank_zero_iff_nondominated(self, f):
+        fj = jnp.asarray(f)
+        ranks = np.asarray(pareto.non_dominated_rank(fj))
+        nd = np.asarray(pareto.non_dominated_mask(fj))
+        assert ((ranks == 0) == nd).all()
+
+    @given(objective_sets())
+    def test_rank_matches_bruteforce_peeling(self, f):
+        fj = jnp.asarray(f)
+        ranks = np.asarray(pareto.non_dominated_rank(fj))
+        # brute force peeling
+        remaining = list(range(len(f)))
+        expect = np.zeros(len(f), int)
+        level = 0
+        while remaining:
+            sub = f[remaining]
+            d = np.asarray(pareto.dominance_matrix(jnp.asarray(sub)))
+            front = [remaining[i] for i in range(len(remaining))
+                     if not d[:, i].any()]
+            for i in front:
+                expect[i] = level
+                remaining.remove(i)
+            level += 1
+        assert (ranks == expect).all()
