@@ -1,12 +1,18 @@
 """Reproduce the paper's Fig. 8: three 16 kb ACIM layouts at different
-design specifications, end-to-end (netlist -> place -> route -> DRC ->
-GDS-like JSON).
+design specifications, through the *batched* layout path — netlist stats,
+placement, routing and DRC for all three specs in one dispatch chain
+(`repro.eda.batched_flow.generate_layouts`), the way a distilled Pareto
+set is laid out.  Pass --full to also run the sequential
+`generate_layout` per spec and export full GDS-like JSON (named cells +
+wire geometry), which the batched path intentionally skips.
 
-  PYTHONPATH=src python examples/layout_flow.py
+  PYTHONPATH=src python examples/layout_flow.py [--full]
 """
 import pathlib
+import sys
 
 from repro.core.acim_spec import MacroSpec
+from repro.eda.batched_flow import generate_layouts
 from repro.eda.flow import generate_layout
 
 # (spec, paper TOPS, paper F^2/bit) — see benchmarks/fig8_layouts.py
@@ -21,15 +27,24 @@ OUT = pathlib.Path("runs/fig8")
 
 def main() -> None:
     OUT.mkdir(parents=True, exist_ok=True)
-    for tag, (spec, paper_tops, paper_area) in PAPER.items():
-        lr = generate_layout(spec)
-        m = lr.metrics()
-        lr.to_json(OUT / f"fig8_{tag}.json")
+    specs = [spec for spec, _, _ in PAPER.values()]
+    res = generate_layouts(specs)
+    res.to_json(OUT / "fig8_batched.json")
+    for (tag, (spec, _, paper_area)), m in zip(PAPER.items(),
+                                               res.metrics_rows()):
         print(f"({tag}) H={spec.h} W={spec.w} L={spec.l} B={spec.b_adc}: "
               f"layout {m['layout_area_f2_per_bit']:.0f} F^2/bit "
               f"(paper {paper_area:.0f}), routed {m['routed_nets']} nets, "
-              f"DRC clean={m['drc_clean']}, {m['elapsed_s']:.1f}s")
-    print(f"layout JSONs in {OUT}/")
+              f"DRC clean={m['drc_clean']}")
+    print(f"batched: {len(specs)} layouts in {res.elapsed_s:.1f}s "
+          f"-> {OUT}/fig8_batched.json")
+    if "--full" in sys.argv[1:]:
+        for tag, (spec, _, _) in PAPER.items():
+            lr = generate_layout(spec)
+            lr.to_json(OUT / f"fig8_{tag}.json")
+            print(f"({tag}) full layout JSON ({len(lr.placement.rects)} "
+                  f"cells, {len(lr.routing.wires)} wires) in "
+                  f"{lr.metrics()['elapsed_s']:.1f}s")
 
 
 if __name__ == "__main__":

@@ -127,6 +127,36 @@ def explore_sizes(sizes=(4096, 16384, 65536), *, seed: int = 0,
     return {s: out[(int(s), seed)] for s in sizes}
 
 
+def distill_and_layout(array_size: int, *, pop_size: int = 256,
+                       generations: int = 80, seed: int = 0,
+                       cal: CalibConstants = CAL28, coarse: int = 64,
+                       capacity: int = 4, use_pallas_dominance: bool = False,
+                       use_pallas_rank: bool = False, **filter_kw):
+    """Paper Fig. 4 end to end: MOGA sweep -> agile distillation ->
+    batched layout generation.
+
+    `filter_kw` are `ParetoResult.filter` thresholds (the user's
+    application requirements); the surviving Pareto set is laid out in
+    one batched dispatch chain (`repro.eda.batched_flow
+    .generate_layouts`) instead of one `generate_layout` call per spec.
+    Returns `(distilled: ParetoResult, layouts: BatchedLayoutResult)`
+    with `layouts.metrics_rows()` aligned to `distilled.specs`.
+    """
+    from repro.eda.batched_flow import generate_layouts
+
+    res = explore(array_size, pop_size=pop_size, generations=generations,
+                  seed=seed, cal=cal,
+                  use_pallas_dominance=use_pallas_dominance,
+                  use_pallas_rank=use_pallas_rank)
+    distilled = res.filter(**filter_kw) if filter_kw else res
+    if not len(distilled):
+        raise ValueError(
+            f"agile filter {filter_kw!r} removed every Pareto point for "
+            f"array_size={array_size}; relax the requirements")
+    return distilled, generate_layouts(distilled.specs, coarse=coarse,
+                                       capacity=capacity)
+
+
 def full_design_space(array_size: int, cal: CalibConstants = CAL28):
     """Exhaustive enumeration of the (small, power-of-two) feasible space.
 

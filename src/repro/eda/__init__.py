@@ -1,0 +1,18 @@
+"""Automated layout generation for the synthesizable ACIM architecture
+(paper Sec. 3.3 and the right half of Fig. 4).
+
+A `repro.core.acim_spec.MacroSpec` design point — typically distilled
+from the MOGA explorer's Pareto set — flows through:
+
+  `netlist`      template-based netlist generation (+ closed-form stats)
+  `placer`       data-oriented hierarchical template expansion
+  `router`       Lee-wavefront grid routing (kernels.maze_route)
+  `flow`         single-spec orchestration: `generate_layout(spec)`
+  `batched_flow` the whole spec batch in a few device dispatches:
+                 `generate_layouts(specs)`
+  `cells`        the customized cell library (calibrated footprints)
+
+The sequential and batched paths share the same vectorized placement and
+the same wavefront/backtrace semantics, so per-spec results agree
+exactly (tests/test_batched_flow.py).
+"""

@@ -1,0 +1,515 @@
+"""Batched layout generation: the explorer's distilled Pareto set through
+place / route / DRC / metrics in a handful of device dispatches.
+
+This is the layout-side counterpart of `repro.core.batched_explorer`
+(paper Fig. 4: the MOGA's user-distilled Pareto set flows straight into
+automated layout generation).  The sequential `repro.eda.flow
+.generate_layout` runs one spec at a time in host Python; here every
+stage is array-programmed over a stacked spec batch:
+
+  * **place** — `placer.rect_tensors` (the data-oriented template
+    expansion) is `jax.vmap`-ed over a stacked `LayoutOperands` tree:
+    one dispatch produces the (B, ..., 4) rect tensors for all specs,
+    padded to per-batch index extents (`BatchDims`) with validity masks.
+  * **route** — inter-template nets are derived from the rect tensors on
+    device, ordered longest-first exactly like the sequential router,
+    and routed net-slot by net-slot with the `kernels.maze_route`
+    wavefront expanding all B grids at once (grid-batched parallel BFS).
+    The backtrace tie-break matches `router.backtrace`, so per-spec
+    occupancy, success and wirelength are identical to B sequential
+    `route()` calls.
+  * **DRC** — a sweep-free pairwise-overlap reduction.  Every column of
+    the macro is an x-translate of column 0 (the expansion is
+    pitch-matched), and the sequential `drc_lite` never compares rects
+    from different columns, so intra-column pair overlaps are counted
+    once on column 0 and multiplied by W; bounds checks run over the
+    flat (B, R, 4) rect tensor.
+  * **metrics / netlist stats** — closed-form (`netlist.stats_for_spec`)
+    and vectorized over the batch.
+
+`generate_layouts(specs)` is the entry point; `core.explorer
+.distill_and_layout` chains `explore_batch` into it.  Per-spec results
+unpack to the sequential dataclasses via `BatchedLayoutResult
+.placements()` / `.drc_reports()` for interop, and
+`tests/test_batched_flow.py` asserts batched == sequential per spec
+(same rects, same route success, same DRC verdict).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimator
+from repro.core.acim_spec import MacroSpec
+from repro.eda import netlist as nl_mod
+from repro.eda.flow import DRCReport
+from repro.eda.placer import (CATEGORIES, CATEGORY_CELL, BatchDims,
+                              LayoutOperands, Placed, Placement,
+                              PlacerGeometry, category_names, dims_for_spec,
+                              geometry, layout_operands, rect_tensors)
+from repro.eda.router import NEIGHBORS, grid_shape
+from repro.kernels.maze_route import INF, wavefront_distance
+
+Array = jax.Array
+
+
+def stack_layout_operands(specs, geom: PlacerGeometry) -> LayoutOperands:
+    """Stack per-spec `LayoutOperands` trees into one batched tree."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[layout_operands(s, geom) for s in specs])
+
+
+# ----------------------------------------------------------------------
+# Placement: one vmapped dispatch for the whole batch
+# ----------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("dims", "geom"))
+def _place_program(ops: LayoutOperands, *, dims: BatchDims,
+                   geom: PlacerGeometry):
+    return jax.vmap(lambda o: rect_tensors(o, dims, geom))(ops)
+
+
+def _flat_rects(tensors):
+    """(B, R, 4) rects + (B, R) mask from the batched category tensors."""
+    b = next(iter(tensors.values()))[0].shape[0]
+    rects = jnp.concatenate(
+        [tensors[c][0].reshape((b, -1, 4)) for c in CATEGORIES], axis=1)
+    mask = jnp.concatenate(
+        [tensors[c][1].reshape((b, -1)) for c in CATEGORIES], axis=1)
+    return rects, mask
+
+
+# ----------------------------------------------------------------------
+# DRC: sweep-free pairwise-overlap reduction
+# ----------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("dims", "geom"))
+def _drc_program(tensors, ops: LayoutOperands, *, dims: BatchDims,
+                 geom: PlacerGeometry):
+    del geom  # geometry is baked into the tensors
+    # Column 0 carries every intra-column pair; columns are x-translates.
+    col = jnp.concatenate([
+        tensors["sram"][0][:, 0],
+        tensors["cap"][0][:, 0],
+        tensors["sw"][0][:, 0],
+        tensors["comp"][0][:, :1],
+        tensors["sar"][0][:, :1],
+        tensors["dff"][0][:, 0],
+    ], axis=1)
+    cmask = jnp.concatenate([
+        tensors["sram"][1][:, 0],
+        tensors["cap"][1][:, 0],
+        tensors["sw"][1][:, 0],
+        tensors["comp"][1][:, :1],
+        tensors["sar"][1][:, :1],
+        tensors["dff"][1][:, 0],
+    ], axis=1)
+    a = col[:, :, None, :]
+    b = col[:, None, :, :]
+    ov = ((a[..., 0] < b[..., 0] + b[..., 2])
+          & (b[..., 0] < a[..., 0] + a[..., 2])
+          & (a[..., 1] < b[..., 1] + b[..., 3])
+          & (b[..., 1] < a[..., 1] + a[..., 3]))
+    c = col.shape[1]
+    upper = jnp.arange(c)[:, None] < jnp.arange(c)[None, :]
+    valid = cmask[:, :, None] & cmask[:, None, :] & upper[None]
+    overlaps = jnp.sum(ov & valid, axis=(1, 2)).astype(jnp.int32) * ops.w
+
+    rects, mask = _flat_rects(tensors)
+    oob = ((rects[..., 1] + rects[..., 3] > ops.height[:, None] + 1)
+           | (rects[..., 0] + rects[..., 2] > ops.width[:, None] + 1))
+    oob = jnp.sum(oob & mask, axis=1).astype(jnp.int32)
+    return overlaps, oob
+
+
+# ----------------------------------------------------------------------
+# Net derivation: same nets, same longest-first order as the host flow
+# ----------------------------------------------------------------------
+class NetBatch(NamedTuple):
+    """Routing-ready net slots, already in routing (longest-first) order.
+
+    hub/tgt coordinates are grid cells (gy, gx); masks gate per-target
+    and per-net validity (padded slots of smaller specs are invalid)."""
+
+    hubs: Array        # (B, N, 2) int32
+    tgts: Array        # (B, N, 2, 2) int32 — up to two star targets
+    tmask: Array       # (B, N, 2) bool
+    nmask: Array       # (B, N) bool
+
+
+def _centers(t: Array):
+    return t[..., 0] + t[..., 2] // 2, t[..., 1] + t[..., 3] // 2
+
+
+@functools.partial(jax.jit, static_argnames=("dims", "geom", "coarse"))
+def _nets_program(tensors, ops: LayoutOperands, *, dims: BatchDims,
+                  geom: PlacerGeometry, coarse: int) -> NetBatch:
+    del geom
+    bsz = ops.w.shape[0]
+    comp_x, comp_y = _centers(tensors["comp"][0])        # (B, W)
+    sar_x, sar_y = _centers(tensors["sar"][0])           # (B, W)
+    cap_x, cap_y = _centers(tensors["cap"][0])           # (B, W, NLA)
+    sram_x, sram_y = _centers(tensors["sram"][0])        # (B, W, H)
+    rd_x, rd_y = _centers(tensors["rd"][0])              # (B, RD)
+
+    top = (ops.n_la - 1)[:, None, None]                  # (B, 1, 1)
+    cap0 = jnp.stack([cap_x[:, :, 0], cap_y[:, :, 0]], -1)
+    capt = jnp.stack([
+        jnp.take_along_axis(cap_x, top, axis=2)[:, :, 0],
+        jnp.take_along_axis(cap_y, top, axis=2)[:, :, 0]], -1)
+    comp = jnp.stack([comp_x, comp_y], -1)               # (B, W, 2)
+    sar = jnp.stack([sar_x, sar_y], -1)
+    jvalid = jnp.arange(dims.w)[None, :] < ops.w[:, None]
+
+    # per-column nets, interleaved (rbl_j, cmp_j) like the host net list
+    rbl_t = jnp.stack([cap0, capt], axis=2)              # (B, W, 2, 2)
+    cmp_t = jnp.stack([sar, sar], axis=2)
+    col_hubs = jnp.stack([comp, comp], axis=2)           # (B, W, 2net, 2)
+    col_tgts = jnp.stack([rbl_t, cmp_t], axis=2)         # (B, W, 2net, 2, 2)
+    col_tmask = jnp.broadcast_to(
+        jnp.array([[True, True], [True, False]]),
+        (bsz, dims.w, 2, 2))
+    col_nmask = jnp.broadcast_to(jvalid[:, :, None], (bsz, dims.w, 2))
+
+    # row-driver nets: driver -> farthest column's cell in that row
+    r = jnp.arange(dims.rd, dtype=jnp.int32)[None, :]    # (1, RD)
+    flat = (ops.w[:, None] - 1) * dims.h + r             # sram[w-1, r]
+    far_x = jnp.take_along_axis(sram_x.reshape((bsz, -1)), flat, axis=1)
+    far_y = jnp.take_along_axis(sram_y.reshape((bsz, -1)), flat, axis=1)
+    rd_hubs = jnp.stack([rd_x, rd_y], -1)                # (B, RD, 2)
+    far = jnp.stack([far_x, far_y], -1)
+    rd_tgts = jnp.stack([far, far], axis=2)              # (B, RD, 2, 2)
+    rd_tmask = jnp.broadcast_to(jnp.array([True, False]),
+                                (bsz, dims.rd, 2))
+    rd_nmask = r < ops.n_rd[:, None]
+
+    hubs = jnp.concatenate([col_hubs.reshape((bsz, -1, 2)), rd_hubs], 1)
+    tgts = jnp.concatenate([col_tgts.reshape((bsz, -1, 2, 2)), rd_tgts], 1)
+    tmask = jnp.concatenate([col_tmask.reshape((bsz, -1, 2)), rd_tmask], 1)
+    nmask = jnp.concatenate([col_nmask.reshape((bsz, -1)), rd_nmask], 1)
+
+    # longest (bounding box) first, in F units, stable — same key and
+    # same tie order as `router.route`'s host sort
+    pins = jnp.concatenate([hubs[:, :, None], tgts], axis=2)  # (B, N, 3, 2)
+    pmask = jnp.concatenate([jnp.ones_like(tmask[:, :, :1]), tmask], 2)
+    px = jnp.where(pmask, pins[..., 0], hubs[:, :, None, 0])
+    py = jnp.where(pmask, pins[..., 1], hubs[:, :, None, 1])
+    span = (px.max(2) - px.min(2)) + (py.max(2) - py.min(2))
+    span = jnp.where(nmask, span, -1)
+    order = jnp.argsort(-span, axis=1, stable=True)      # (B, N)
+
+    take = lambda a: jnp.take_along_axis(  # noqa: E731
+        a, order.reshape(order.shape + (1,) * (a.ndim - 2)), axis=1)
+    hubs, tgts, tmask, nmask = (take(hubs), take(tgts), take(tmask),
+                                take(nmask))
+
+    # F-unit pin coords -> clipped per-spec grid cells (gy, gx)
+    gh = jnp.maximum(2, ops.height // coarse + 3)[:, None]
+    gw = jnp.maximum(2, ops.width // coarse + 2)[:, None]
+
+    def to_cell(xy, gh, gw):
+        gy = jnp.clip(xy[..., 1] // coarse, 0, gh - 1)
+        gx = jnp.clip(xy[..., 0] // coarse, 0, gw - 1)
+        return jnp.stack([gy, gx], axis=-1)
+
+    return NetBatch(to_cell(hubs, gh, gw),
+                    to_cell(tgts, gh[..., None], gw[..., None]),
+                    tmask, nmask)
+
+
+# ----------------------------------------------------------------------
+# Routing: per net slot, one batched wavefront + on-device backtrace
+# ----------------------------------------------------------------------
+def _dir_field(dist: Array) -> Array:
+    """Backtrace direction of every cell: the first `NEIGHBORS` entry at
+    distance d-1 (router.backtrace's tie-break), int8 in {0..3}.
+
+    Vectorized once per wavefront; the per-step walk then costs a single
+    scalar gather.  Cells with d == 0 or d == INF hold an arbitrary
+    direction — the walk never reads them (sources stop the walk, and
+    blocked targets take their special entry step first).  BFS
+    guarantees every cell with finite d > 0 has a d-1 neighbour.
+    """
+    gh, gw = dist.shape
+    pad = jnp.pad(dist, 1, constant_values=INF)
+    match = jnp.stack([pad[1 + dy:1 + dy + gh, 1 + dx:1 + dx + gw]
+                       == dist - 1 for dy, dx in NEIGHBORS])
+    return jnp.argmax(match, axis=0).astype(jnp.int8)
+
+
+def _trace_one(dist: Array, dirf: Array, tgt: Array, active: Array):
+    """Backtrace one star target on one grid; returns (inc, wl, reachable).
+
+    Mirrors `router.target_distance` + `router.backtrace`: a blocked dst
+    is enterable at +1 from its best neighbour, then the walk follows
+    the precomputed direction field — identical cells, so the occupancy
+    evolution matches the sequential router exactly.  The walk scatters
+    its visited cells once per `chunk` steps (out-of-range rows are
+    dropped), not once per step — scatter cost is per-op on CPU.
+    """
+    gh, gw = dist.shape
+    chunk = 16
+    ty, tx = tgt[0], tgt[1]
+    dv = dist[ty, tx]
+    win = jax.lax.dynamic_slice(jnp.pad(dist, 1, constant_values=INF),
+                                (ty, tx), (3, 3))
+    # NEIGHBORS order: down, up, right, left
+    nd0 = jnp.stack([win[2, 1], win[0, 1], win[1, 2], win[1, 0]])
+    d0 = jnp.where(dv < INF, dv, jnp.minimum(INF, jnp.min(nd0) + 1))
+    reach = d0 < INF
+    run = active & reach
+    dy_tab = jnp.array([n[0] for n in NEIGHBORS])
+    dx_tab = jnp.array([n[1] for n in NEIGHBORS])
+
+    # blocked target: its entry step is not in the direction field
+    esel = jnp.argmax(nd0 == d0 - 1)
+    blocked = run & (dv >= INF)
+    ey = jnp.where(blocked, ty + dy_tab[esel], ty)
+    ex = jnp.where(blocked, tx + dx_tab[esel], tx)
+    inc = jnp.zeros((gh, gw), jnp.int8).at[
+        jnp.stack([jnp.where(run, ty, gh), jnp.where(blocked, ey, gh)]),
+        jnp.stack([tx, ex])].add(jnp.int8(1), mode="drop")
+    dirf_flat = dirf.reshape(-1)
+
+    def walk(carry, _):
+        y, x, d = carry
+        sel = dirf_flat[y * gw + x]
+        stepping = d > 0
+        ny = jnp.where(stepping, y + dy_tab[sel], y)
+        nx = jnp.where(stepping, x + dx_tab[sel], x)
+        out = (jnp.where(stepping, ny, gh), nx)    # row gh -> dropped
+        return (ny, nx, jnp.maximum(d - 1, 0)), out
+
+    def cond(state):
+        _, _, d, _ = state
+        return d > 0
+
+    def body(state):
+        y, x, d, inc = state
+        (y, x, d), (ys, xs) = jax.lax.scan(walk, (y, x, d), None,
+                                           length=chunk)
+        # NB: steps past the path's end all emit the same dropped index,
+        # so unique_indices must NOT be asserted here
+        return y, x, d, inc.at[ys, xs].add(jnp.int8(1), mode="drop")
+
+    _, _, _, inc = jax.lax.while_loop(
+        cond, body,
+        (ey, ex, jnp.where(run, jnp.where(blocked, d0 - 1, d0), 0), inc))
+    wl = jnp.where(run, d0 + 1, 0)
+    return inc, wl, reach
+
+
+def _route_step(occ_count: Array, hubs: Array, tgts: Array, tmask: Array,
+                nmask: Array, *, capacity: int, use_kernel: bool | None):
+    """Route one net slot across the whole batch.
+
+    occ_count: (B, Gh, Gw) int32; hubs (B, 2); tgts (B, 2, 2);
+    tmask (B, 2); nmask (B,).  Returns (occ_count', ok, wirelength).
+    """
+    _, gh, gw = occ_count.shape
+    occ = occ_count >= capacity
+    iy = jnp.arange(gh)[None, :, None]
+    ix = jnp.arange(gw)[None, None, :]
+    seed = ((iy == hubs[:, 0, None, None]) & (ix == hubs[:, 1, None, None])
+            & nmask[:, None, None])
+    dist = wavefront_distance(occ, seed, use_kernel=use_kernel)
+
+    dirf = jax.vmap(_dir_field)(dist)
+    trace = jax.vmap(jax.vmap(_trace_one, in_axes=(None, None, 0, 0)))
+    inc, wl, reach = trace(dist, dirf, tgts, tmask & nmask[:, None])
+    ok = nmask & jnp.all(reach | ~tmask, axis=1)
+    occ_count = occ_count + (inc.astype(jnp.int32).sum(axis=1)
+                             * ok[:, None, None])
+    return occ_count, ok, wl.sum(axis=1) * ok
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "use_kernel"))
+def _route_program(occ0: Array, nets: NetBatch, *, capacity: int,
+                   use_kernel: bool | None):
+    """All net slots in one compiled program: `lax.scan` over the slot
+    axis with the (occupancy, counters) carry — the sequential
+    net-by-net data dependence stays, but there is a single dispatch for
+    the whole batch instead of one per net."""
+
+    def step(carry, slot):
+        occ, routed, failed, wirelen = carry
+        hubs, tgts, tmask, nmask = slot
+        occ, ok, wl = _route_step(occ, hubs, tgts, tmask, nmask,
+                                  capacity=capacity, use_kernel=use_kernel)
+        return (occ, routed + ok, failed + (nmask & ~ok), wirelen + wl), None
+
+    bsz = occ0.shape[0]
+    zeros = jnp.zeros((bsz,), jnp.int32)
+    slots = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), nets)
+    (occ, routed, failed, wirelen), _ = jax.lax.scan(
+        step, (occ0, zeros, zeros, zeros), slots)
+    return occ, routed, failed, wirelen
+
+
+class BatchedRouting(NamedTuple):
+    routed: np.ndarray          # (B,) int32 — successfully routed nets
+    failed: np.ndarray          # (B,) int32
+    wirelength: np.ndarray      # (B,) int32 — total path points
+    occ_count: np.ndarray       # (B, Gh, Gw) int32 congestion map
+    grids: np.ndarray           # (B, 2) per-spec (gh, gw)
+
+    @property
+    def success_rate(self) -> np.ndarray:
+        n = self.routed + self.failed
+        return np.where(n > 0, self.routed / np.maximum(n, 1), 1.0)
+
+
+def batched_route(nets: NetBatch, widths: np.ndarray, heights: np.ndarray,
+                  *, coarse: int = 64, capacity: int = 4,
+                  use_kernel: bool | None = None) -> BatchedRouting:
+    """Drive the per-net-slot batched wavefront over all specs.
+
+    Cells beyond a spec's own routing grid are pre-blocked, so padding a
+    small spec up to the batch-max grid cannot open new paths."""
+    bsz = len(widths)
+    grids = np.array([grid_shape(int(w), int(h), coarse)
+                      for w, h in zip(widths, heights)], np.int64)
+    gh_max, gw_max = int(grids[:, 0].max()), int(grids[:, 1].max())
+    iy = np.arange(gh_max)[None, :, None]
+    ix = np.arange(gw_max)[None, None, :]
+    blocked = ((iy >= grids[:, 0, None, None])
+               | (ix >= grids[:, 1, None, None]))
+    occ0 = jnp.asarray(np.where(blocked, capacity, 0).astype(np.int32))
+    occ, routed, failed, wirelen = _route_program(
+        occ0, nets, capacity=capacity, use_kernel=use_kernel)
+    occ_np = np.asarray(occ)
+    occ_np = np.where(blocked, 0, occ_np).astype(np.int32)
+    return BatchedRouting(np.asarray(routed), np.asarray(failed),
+                          np.asarray(wirelen), occ_np, grids)
+
+
+# ----------------------------------------------------------------------
+# The end-to-end batched flow
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class BatchedLayoutResult:
+    """Layouts for a whole spec batch, in padded tensor form.
+
+    Mirrors `flow.LayoutResult` per spec (`metrics_rows` carries the same
+    keys; `placements()` / `drc_reports()` unpack to the sequential
+    dataclasses).  Wire point lists are not materialized — the routing
+    stats and the congestion map (`routing.occ_count`) are; use the
+    sequential `flow.generate_layout` when full wire geometry is needed
+    (e.g. for GDS-like JSON export of a single chosen design point).
+    """
+
+    specs: tuple[MacroSpec, ...]
+    dims: BatchDims
+    geom: PlacerGeometry
+    ops: LayoutOperands
+    tensors: dict
+    routing: BatchedRouting
+    drc_overlaps: np.ndarray
+    drc_oob: np.ndarray
+    netlist_stats: list[dict]
+    elapsed_s: float
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    @property
+    def widths(self) -> np.ndarray:
+        return np.asarray(self.ops.width)
+
+    @property
+    def heights(self) -> np.ndarray:
+        return np.asarray(self.ops.height)
+
+    @property
+    def drc_clean(self) -> np.ndarray:
+        return (self.drc_overlaps == 0) & (self.drc_oob == 0)
+
+    def drc_reports(self) -> list[DRCReport]:
+        return [DRCReport(int(o), int(b))
+                for o, b in zip(self.drc_overlaps, self.drc_oob)]
+
+    def placements(self) -> list[Placement]:
+        """Unpack per-spec named `Placement`s (host-side, for interop)."""
+        out = []
+        np_tensors = {c: (np.asarray(r), np.asarray(m))
+                      for c, (r, m) in self.tensors.items()}
+        for i, spec in enumerate(self.specs):
+            exact = dims_for_spec(spec)
+            rects: list[Placed] = []
+            for cat in CATEGORIES:
+                vals, mask = np_tensors[cat]
+                vals = vals[i].reshape(-1, 4)[mask[i].reshape(-1)]
+                cell = CATEGORY_CELL[cat]
+                rects.extend(
+                    Placed(name, cell, *map(int, xywh)) for name, xywh
+                    in zip(category_names(cat, exact, spec), vals))
+            out.append(Placement(spec, rects, int(self.widths[i]),
+                                 int(self.heights[i])))
+        return out
+
+    def metrics_rows(self) -> list[dict]:
+        """Per-spec metrics with the same keys as `LayoutResult.metrics`
+        (elapsed_s is the batch wall-clock amortized over specs)."""
+        h = np.array([s.h for s in self.specs], np.float32)
+        l = np.array([s.l for s in self.specs], np.float32)
+        b = np.array([s.b_adc for s in self.specs], np.float32)
+        est = np.asarray(estimator.area_f2_per_bit(h, l, b))
+        area = (self.widths.astype(np.float64) * self.heights
+                / np.array([s.array_size for s in self.specs]))
+        succ = self.routing.success_rate
+        rows = []
+        for i, s in enumerate(self.specs):
+            rows.append({
+                "h": s.h, "w": s.w, "l": s.l, "b_adc": s.b_adc,
+                "layout_area_f2_per_bit": float(area[i]),
+                "estimator_area_f2_per_bit": float(est[i]),
+                "area_model_error": float(area[i] / est[i] - 1.0),
+                "routed_nets": int(self.routing.routed[i]),
+                "failed_nets": int(self.routing.failed[i]),
+                "route_success": float(succ[i]),
+                "wirelength": int(self.routing.wirelength[i]),
+                "drc_clean": bool(self.drc_clean[i]),
+                "elapsed_s": self.elapsed_s / max(len(self.specs), 1),
+            })
+        return rows
+
+    def to_json(self, path: str) -> None:
+        import json
+
+        with open(path, "w") as f:
+            json.dump({"specs": [s.as_tuple() for s in self.specs],
+                       "points": self.metrics_rows(),
+                       "elapsed_s": self.elapsed_s}, f, indent=1)
+
+
+def generate_layouts(specs, *, coarse: int = 64, capacity: int = 4,
+                     use_kernel: bool | None = None) -> BatchedLayoutResult:
+    """Lay out a whole (e.g. Pareto-distilled) spec batch at once.
+
+    Equivalent per spec to calling `flow.generate_layout` B times, but
+    placement/DRC/net derivation are single vmapped dispatches and
+    routing expands all B wavefronts together.
+    """
+    specs = tuple(specs)
+    if not specs:
+        raise ValueError("generate_layouts needs at least one MacroSpec")
+    t0 = time.time()
+    geom = geometry()
+    dims = BatchDims.for_specs(specs)
+    ops = stack_layout_operands(specs, geom)
+    tensors = _place_program(ops, dims=dims, geom=geom)
+    overlaps, oob = _drc_program(tensors, ops, dims=dims, geom=geom)
+    nets = _nets_program(tensors, ops, dims=dims, geom=geom, coarse=coarse)
+    routing = batched_route(nets, np.asarray(ops.width),
+                            np.asarray(ops.height), coarse=coarse,
+                            capacity=capacity, use_kernel=use_kernel)
+    stats = [nl_mod.stats_for_spec(s) for s in specs]
+    return BatchedLayoutResult(
+        specs=specs, dims=dims, geom=geom, ops=ops, tensors=tensors,
+        routing=routing, drc_overlaps=np.asarray(overlaps),
+        drc_oob=np.asarray(oob), netlist_stats=stats,
+        elapsed_s=time.time() - t0)

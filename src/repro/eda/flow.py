@@ -2,9 +2,17 @@
 hierarchical template placement -> grid routing -> DRC-lite -> metrics +
 GDS-like JSON export.
 
-`generate_layout(spec)` is what the explorer's user-distilled Pareto set is
-fed through (examples/layout_flow.py reproduces Fig. 8's three 16 kb
-design points in seconds each, vs the paper's "a few minutes").
+`generate_layout(spec)` is the thin single-spec path: it composes the
+same vectorized components the batched flow vmaps (`placer.rect_tensors`
+for placement, the `kernels.maze_route` wavefront for routing), plus the
+full named-instance / wire-geometry materialization that only makes
+sense one spec at a time.  To lay out a whole distilled Pareto set, use
+`repro.eda.batched_flow.generate_layouts` (or
+`repro.core.explorer.distill_and_layout`) — one dispatch per stage for
+the entire batch, identical per-spec results.
+
+`drc_lite` here is the host sweep-line reference; the batched flow
+vectorizes the same checks as a pairwise-overlap reduction.
 """
 from __future__ import annotations
 
@@ -105,7 +113,7 @@ def _top_level_nets(spec: MacroSpec, p: Placement):
         sar = by_name[f"c{j}_sar"]
         nets.append((f"c{j}_cmp", [(int(comp.cx), int(comp.cy)),
                                    (int(sar.cx), int(sar.cy))]))
-    for r in range(min(spec.h, 64)):
+    for r in range(min(spec.h, nl_mod.MAX_ROW_DRIVERS)):
         drv = by_name.get(f"rd{r}")
         if drv is None:
             continue

@@ -18,6 +18,10 @@ import dataclasses
 
 from repro.core.acim_spec import MacroSpec
 
+# RWL rows beyond this are uniform repeats; netlist, placer and router
+# all instantiate/route only this many row drivers to bound model size.
+MAX_ROW_DRIVERS = 64
+
 
 @dataclasses.dataclass(frozen=True)
 class Instance:
@@ -43,6 +47,32 @@ class Netlist:
             kinds[inst.cell] = kinds.get(inst.cell, 0) + 1
         return {"instances": len(self.instances), "nets": len(self.nets),
                 "by_cell": kinds}
+
+
+def stats_for_spec(spec: MacroSpec) -> dict:
+    """Closed-form `Netlist.stats()` without building the instance list.
+
+    The hierarchy is regular, so the counts are pure arithmetic in the
+    spec; the batched layout flow (`repro.eda.batched_flow`) uses this to
+    skip the per-instance Python of `generate` entirely.  Equality with
+    `generate(spec).stats()` is asserted in tests/test_eda.py.
+    """
+    n_la = spec.n_caps
+    n_sw = len(spec.sar_groups()) - 1
+    n_rd = min(spec.h, MAX_ROW_DRIVERS)
+    by_cell = {
+        "CAPLC": spec.w * n_la,
+        "SRAM8T": spec.w * spec.h,
+        "RBLSW": spec.w * n_sw,
+        "COMP": spec.w,
+        "SARLOGIC": spec.w,
+        "DFF": spec.w * spec.b_adc,
+        "ROWDRV": n_rd,
+    }
+    by_cell = {k: v for k, v in by_cell.items() if v}
+    return {"instances": sum(by_cell.values()),
+            "nets": spec.w * (spec.h + 3) + n_rd,
+            "by_cell": by_cell}
 
 
 def generate(spec: MacroSpec) -> Netlist:
@@ -83,7 +113,7 @@ def generate(spec: MacroSpec) -> Netlist:
         nets.append(Net(f"{col}_sar_bus", tuple([(sar, "DOUT")] + dff_pins)))
 
     # row drivers: one RWL per row crossing every column
-    for r in range(min(spec.h, 64)):        # RWL nets beyond 64 are repeats;
+    for r in range(min(spec.h, MAX_ROW_DRIVERS)):  # see MAX_ROW_DRIVERS;
         drv = f"rd{r}"                      # keep netlist size bounded, the
         insts.append(Instance(drv, "ROWDRV"))  # row template is uniform
         pins = [(drv, "OUT")]

@@ -1,4 +1,5 @@
-"""Template-based hierarchical placer (paper Sec. 3.3, Fig. 7).
+"""Template-based hierarchical placer (paper Sec. 3.3, Fig. 7) as a
+data-oriented template expansion.
 
 Bottom-up, per the paper: inside each hierarchy level only the child
 blocks are placed (their internals are opaque); the final macro layout
@@ -12,15 +13,42 @@ composes pre-placed templates.
                     grid-based optimization of [25-27])
   L2  macro:        W columns abutted; row drivers on the left edge
 
-Every placement is returned as absolute rectangles on the F grid.
+Since PR 2 the expansion itself is array-programmed, in the
+`nsga2.SpaceOperands` style: everything that varies per design point is
+a traced scalar operand (`LayoutOperands`), everything structural is
+static (`PlacerGeometry` from the cell library, `BatchDims` padded index
+extents), and `rect_tensors` produces the absolute rectangles for every
+template category as jnp index-grid broadcasts — no per-rect Python.
+`repro.eda.batched_flow` vmaps `rect_tensors` over a stacked operand
+tree to place a whole Pareto set in one dispatch; the classic
+`place(spec)` entry point evaluates the same tensors at the spec's exact
+extents and attaches instance names, so the sequential and batched paths
+are equal by construction.
+
+Every placement is in absolute rectangles on the F grid.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.acim_spec import MacroSpec
 from repro.eda.cells import Cell, library
+from repro.eda.netlist import MAX_ROW_DRIVERS
+
+Array = jax.Array
+
+# Template categories of the expansion, in flat-concatenation order.
+CATEGORIES = ("sram", "cap", "sw", "comp", "sar", "dff", "rd")
+# Cell kind backing each category (index into the cell library).
+CATEGORY_CELL = {"sram": "SRAM8T", "cap": "CAPLC", "sw": "RBLSW",
+                 "comp": "COMP", "sar": "SARLOGIC", "dff": "DFF",
+                 "rd": "ROWDRV"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,17 +84,90 @@ class Placement:
         return self.area_f2 / self.spec.array_size
 
 
-def _local_array_template(lib: dict[str, Cell], l: int):
-    """L SRAM cells stacked + cap beside; returns (rects, w, h)."""
-    s = lib["SRAM8T"]
-    c = lib["CAPLC"]
-    h = max(l * s.height, c.height)
-    rects = [("s%d" % k, "SRAM8T", 0, k * s.height) for k in range(l)]
-    rects.append(("cap", "CAPLC", s.width, (h - c.height) // 2))
-    return rects, s.width + c.width, h
+# ----------------------------------------------------------------------
+# Static geometry (cell library) and traced per-spec operands
+# ----------------------------------------------------------------------
+class PlacerGeometry(NamedTuple):
+    """Hashable, design-point-independent geometry from the cell library."""
+
+    s_w: int            # SRAM8T footprint
+    s_h: int
+    c_w: int            # CAPLC footprint
+    c_h: int
+    col_w: int          # column pitch: SRAM strip + cap alongside
+    order: tuple[str, ...]          # optimized periphery order (4 kinds)
+    pitch: tuple[tuple[str, int], ...]   # kind -> pitch-matched height
+    drv_w: int          # ROWDRV footprint
+    drv_h: int
+    xshift: int         # columns sit right of the driver strip
+
+    def pitch_of(self, kind: str) -> int:
+        return dict(self.pitch)[kind]
 
 
-def _periph_order(lib: dict[str, Cell], spec: MacroSpec) -> list[str]:
+class LayoutOperands(NamedTuple):
+    """Traced per-design-point scalars of the template expansion.
+
+    All leaves are () int32 arrays, so a layout batch is just a tree of
+    stacked leaves and `rect_tensors` vmaps over it without retracing
+    (`repro.eda.batched_flow.stack_layout_operands`).
+    """
+
+    h: Array            # array height (cells per column)
+    w: Array            # columns
+    l: Array            # local-array size
+    b_adc: Array        # ADC bits
+    n_la: Array         # local arrays per column == H/L
+    n_sw: Array         # RBL isolation switches per column
+    la_h: Array         # local-array template height
+    array_h: Array      # cell-array region height
+    y_sw: Array         # periphery offsets below the array, per kind
+    y_comp: Array
+    y_sar: Array
+    y_dff: Array
+    cap_y: Array        # cap vertical centering inside the local array
+    drv_pitch: Array    # row-driver vertical pitch
+    n_rd: Array         # instantiated row drivers (min(H, 64))
+    width: Array        # macro bounding box
+    height: Array
+
+
+class BatchDims(NamedTuple):
+    """Static (shape-determining) index extents of the rect tensors —
+    per-spec exact for `place`, per-batch maxima for the batched flow.
+
+    SRAM cells are indexed (column, row) rather than (column, local
+    array, cell): padding maxima multiply, and `n_la * l` factors of
+    *different* specs can vastly exceed any real `h = n_la * l`, while
+    the row extent is bounded by `max(h)` no matter how the batch mixes
+    local-array sizes."""
+
+    w: int
+    h: int
+    n_la: int
+    l: int
+    n_sw: int
+    b: int
+    rd: int
+
+    @classmethod
+    def for_specs(cls, specs) -> "BatchDims":
+        return cls(
+            w=max(s.w for s in specs),
+            h=max(s.h for s in specs),
+            n_la=max(s.n_caps for s in specs),
+            l=max(s.l for s in specs),
+            n_sw=max(_n_switches(s) for s in specs),
+            b=max(s.b_adc for s in specs),
+            rd=max(min(s.h, MAX_ROW_DRIVERS) for s in specs),
+        )
+
+
+def _n_switches(spec: MacroSpec) -> int:
+    return len(spec.sar_groups()) - 1
+
+
+def _periph_order(lib: dict[str, Cell]) -> tuple[str, ...]:
     """Order the column periphery to minimize RBL/SAR-bus HPWL.
 
     The RBL enters from the top (array side): switches must sit nearest,
@@ -89,69 +190,165 @@ def _periph_order(lib: dict[str, Cell], spec: MacroSpec) -> list[str]:
                 + abs(pos["SARLOGIC"] - pos["DFF"]))
         if best_cost is None or cost < best_cost:
             best, best_cost = order, cost
-    return list(best)
+    return tuple(best)
+
+
+def geometry(lib: dict[str, Cell] | None = None) -> PlacerGeometry:
+    """Fold the cell library into the static expansion geometry.
+
+    Pitch-matched composition: the column periphery (switches,
+    comparator+SAR, DFFs) is reshaped to the array column width — the
+    standard CIM pitch-matching discipline; Eq. 10's A_COMP/H
+    amortization is exactly this geometry.
+    """
+    lib = lib or library()
+    s, c, drv = lib["SRAM8T"], lib["CAPLC"], lib["ROWDRV"]
+    col_w = s.width + c.width
+    pitch = tuple(
+        (k, max(1, (lib[k].area + col_w - 1) // col_w))
+        for k in ("RBLSW", "COMP", "SARLOGIC", "DFF"))
+    return PlacerGeometry(
+        s_w=s.width, s_h=s.height, c_w=c.width, c_h=c.height, col_w=col_w,
+        order=_periph_order(lib), pitch=pitch,
+        drv_w=drv.width, drv_h=drv.height, xshift=drv.width + 2)
+
+
+def layout_operands(spec: MacroSpec,
+                    geom: PlacerGeometry | None = None) -> LayoutOperands:
+    """Fold one design point into the traced operand tree (exact ints)."""
+    geom = geom or geometry()
+    n_la = spec.n_caps
+    n_sw = _n_switches(spec)
+    la_h = max(spec.l * geom.s_h, geom.c_h)
+    array_h = n_la * la_h
+    counts = {"RBLSW": n_sw, "COMP": 1, "SARLOGIC": 1, "DFF": spec.b_adc}
+    y, periph_y = 0, {}
+    for k in geom.order:
+        periph_y[k] = y
+        y += counts[k] * geom.pitch_of(k) + 1
+    periph_h = y
+    i32 = lambda v: jnp.int32(v)  # noqa: E731
+    return LayoutOperands(
+        h=i32(spec.h), w=i32(spec.w), l=i32(spec.l), b_adc=i32(spec.b_adc),
+        n_la=i32(n_la), n_sw=i32(n_sw), la_h=i32(la_h), array_h=i32(array_h),
+        y_sw=i32(periph_y["RBLSW"]), y_comp=i32(periph_y["COMP"]),
+        y_sar=i32(periph_y["SARLOGIC"]), y_dff=i32(periph_y["DFF"]),
+        cap_y=i32((la_h - geom.c_h) // 2),
+        drv_pitch=i32(max(la_h // max(spec.l, 1), geom.drv_h)),
+        n_rd=i32(min(spec.h, MAX_ROW_DRIVERS)),
+        width=i32(spec.w * geom.col_w + geom.drv_w + 2),
+        height=i32(array_h + periph_h))
+
+
+# ----------------------------------------------------------------------
+# The vmappable template expansion
+# ----------------------------------------------------------------------
+def _stack_xywh(x, y, w, h):
+    """Broadcast four int32 index-grid planes into a (..., 4) rect tensor."""
+    x, y, w, h = jnp.broadcast_arrays(
+        *(jnp.asarray(v, jnp.int32) for v in (x, y, w, h)))
+    return jnp.stack([x, y, w, h], axis=-1)
+
+
+def rect_tensors(ops: LayoutOperands, dims: BatchDims,
+                 geom: PlacerGeometry) -> dict[str, tuple[Array, Array]]:
+    """Expand one design point into per-category rect tensors.
+
+    Returns {category: (rects, mask)} where `rects[..., :]` is
+    (x, y, w, h) int32 on the F grid, indexed [j, i, k] (column, local
+    array, cell) down to [r] (row driver) per category, and `mask` marks
+    entries that exist for this design point (index < the operand
+    extent).  Pure function of traced operands — `jax.vmap` it over a
+    stacked `LayoutOperands` batch to place many specs in one dispatch.
+    """
+    j = jnp.arange(dims.w, dtype=jnp.int32)
+    row = jnp.arange(dims.h, dtype=jnp.int32)
+    i = jnp.arange(dims.n_la, dtype=jnp.int32)
+    g = jnp.arange(dims.n_sw, dtype=jnp.int32)
+    b = jnp.arange(dims.b, dtype=jnp.int32)
+    r = jnp.arange(dims.rd, dtype=jnp.int32)
+    col_x = geom.xshift + j * geom.col_w                       # (W,)
+    jm, im = j < ops.w, i < ops.n_la
+
+    p_sw, p_comp = geom.pitch_of("RBLSW"), geom.pitch_of("COMP")
+    p_sar, p_dff = geom.pitch_of("SARLOGIC"), geom.pitch_of("DFF")
+
+    # row -> (local array, cell-in-array) from the traced L operand
+    la_of_row, k_of_row = row // ops.l, row % ops.l
+    sram = _stack_xywh(
+        col_x[:, None],
+        (la_of_row * ops.la_h + k_of_row * geom.s_h)[None, :],
+        geom.s_w, geom.s_h)
+    cap = _stack_xywh(
+        col_x[:, None] + geom.s_w,
+        i[None, :] * ops.la_h + ops.cap_y, geom.c_w, geom.c_h)
+    sw = _stack_xywh(
+        col_x[:, None],
+        ops.array_h + ops.y_sw + g[None, :] * p_sw, geom.col_w, p_sw)
+    comp = _stack_xywh(col_x, ops.array_h + ops.y_comp, geom.col_w, p_comp)
+    sar = _stack_xywh(col_x, ops.array_h + ops.y_sar, geom.col_w, p_sar)
+    dff = _stack_xywh(
+        col_x[:, None],
+        ops.array_h + ops.y_dff + b[None, :] * p_dff, geom.col_w, p_dff)
+    rd = _stack_xywh(jnp.zeros_like(r), r * ops.drv_pitch,
+                     geom.drv_w, geom.drv_h)
+
+    return {
+        "sram": (sram, jm[:, None] & (row < ops.h)[None, :]),
+        "cap": (cap, jm[:, None] & im[None, :]),
+        "sw": (sw, jm[:, None] & (g < ops.n_sw)[None, :]),
+        "comp": (comp, jm),
+        "sar": (sar, jm),
+        "dff": (dff, jm[:, None] & (b < ops.b_adc)[None, :]),
+        "rd": (rd, r < ops.n_rd),
+    }
+
+
+def category_names(cat: str, dims: BatchDims, spec: MacroSpec):
+    """Instance names of a category tensor at the spec's *exact* extents
+    (`dims == dims_for_spec(spec)`), flattened in index order."""
+    if cat == "sram":
+        return [f"c{j}_la{r // spec.l}_s{r % spec.l}" for j in range(dims.w)
+                for r in range(dims.h)]
+    if cat == "cap":
+        return [f"c{j}_la{i}_cap" for j in range(dims.w)
+                for i in range(dims.n_la)]
+    if cat == "sw":
+        return [f"c{j}_sw{g}" for j in range(dims.w)
+                for g in range(dims.n_sw)]
+    if cat == "comp":
+        return [f"c{j}_comp" for j in range(dims.w)]
+    if cat == "sar":
+        return [f"c{j}_sar" for j in range(dims.w)]
+    if cat == "dff":
+        return [f"c{j}_dff{b}" for j in range(dims.w)
+                for b in range(dims.b)]
+    if cat == "rd":
+        return [f"rd{r}" for r in range(dims.rd)]
+    raise KeyError(cat)
+
+
+def dims_for_spec(spec: MacroSpec) -> BatchDims:
+    return BatchDims.for_specs([spec])
 
 
 def place(spec: MacroSpec) -> Placement:
-    """Pitch-matched composition: the column periphery (switches,
-    comparator+SAR, DFFs) is reshaped to the array column width — the
-    standard CIM pitch-matching discipline; Eq. 10's A_COMP/H amortization
-    is exactly this geometry."""
-    lib = library()
-    la_rects, la_w, la_h = _local_array_template(lib, spec.l)
-    n_la = spec.n_caps
-    order = _periph_order(lib, spec)
+    """Single-spec placement with named instances.
 
+    Evaluates the same `rect_tensors` expansion the batched flow vmaps,
+    at the spec's exact extents (every mask entry true), then attaches
+    instance names on the host.
+    """
+    geom = geometry()
+    ops = layout_operands(spec, geom)
+    dims = dims_for_spec(spec)
+    tensors = rect_tensors(ops, dims, geom)
     rects: list[Placed] = []
-    col_w = la_w
-    array_h = n_la * la_h
-
-    def pitch_h(kind: str, count: int = 1) -> int:
-        """height of `count` cells of `kind` reshaped to the column pitch."""
-        return max(1, (lib[kind].area * count + col_w - 1) // col_w)
-
-    n_sw = len(spec.sar_groups()) - 1
-    periph_y, y = {}, 0
-    counts = {"RBLSW": n_sw, "COMP": 1, "SARLOGIC": 1, "DFF": spec.b_adc}
-    for k in order:
-        periph_y[k] = y
-        y += counts[k] * pitch_h(k) + 1
-    periph_h = y
-
-    for j in range(spec.w):
-        x0 = j * col_w
-        for i in range(n_la):
-            y0 = i * la_h
-            for name, cellk, dx, dy in la_rects:
-                c = lib[cellk]
-                rects.append(Placed(f"c{j}_la{i}_{name}", cellk,
-                                    x0 + dx, y0 + dy, c.width, c.height))
-        ybase = array_h
-        for g in range(n_sw):
-            rects.append(Placed(f"c{j}_sw{g}", "RBLSW", x0,
-                                ybase + periph_y["RBLSW"] + g * pitch_h("RBLSW"),
-                                col_w, pitch_h("RBLSW")))
-        rects.append(Placed(f"c{j}_comp", "COMP", x0,
-                            ybase + periph_y["COMP"], col_w, pitch_h("COMP")))
-        rects.append(Placed(f"c{j}_sar", "SARLOGIC", x0,
-                            ybase + periph_y["SARLOGIC"], col_w,
-                            pitch_h("SARLOGIC")))
-        for b in range(spec.b_adc):
-            rects.append(Placed(f"c{j}_dff{b}", "DFF", x0,
-                                ybase + periph_y["DFF"] + b * pitch_h("DFF"),
-                                col_w, pitch_h("DFF")))
-
-    # row drivers on the left edge
-    drv = lib["ROWDRV"]
-    for r in range(min(spec.h, 64)):
-        rects.append(Placed(f"rd{r}", "ROWDRV", 0,
-                            r * max(la_h // max(spec.l, 1), drv.height),
-                            drv.width, drv.height))
-
-    total_h = array_h + periph_h
-    total_w = spec.w * col_w + drv.width + 2
-    # shift columns right of the driver strip
-    rects = [Placed(r.name, r.cell, r.x + drv.width + 2 if not
-                    r.name.startswith("rd") else r.x, r.y, r.w, r.h)
-             for r in rects]
-    return Placement(spec, rects, total_w, total_h)
+    for cat in CATEGORIES:
+        vals = np.asarray(tensors[cat][0]).reshape(-1, 4)
+        cell = CATEGORY_CELL[cat]
+        rects.extend(
+            Placed(name, cell, int(x), int(y), int(w), int(h))
+            for name, (x, y, w, h)
+            in zip(category_names(cat, dims, spec), vals))
+    return Placement(spec, rects, int(ops.width), int(ops.height))

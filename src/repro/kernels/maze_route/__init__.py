@@ -1,0 +1,4 @@
+from repro.kernels.maze_route.ops import INF, wavefront_distance
+from repro.kernels.maze_route.ref import wavefront_distance_ref
+
+__all__ = ["INF", "wavefront_distance", "wavefront_distance_ref"]

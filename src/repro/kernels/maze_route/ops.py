@@ -1,0 +1,60 @@
+"""Public maze_route entry point: shape handling, padding, impl selection.
+
+`wavefront_distance` accepts a single (H, W) grid or a batched (B, H, W)
+stack and returns int32 BFS distances (`INF` = unreachable).  Padding to
+the TPU tile multiples (sublane 8, lane 128) uses *blocked* cells, so the
+pad region is unreachable and distances inside the real grid are
+untouched; different-sized grids in one batch are handled the same way by
+the caller (`repro.eda.batched_flow` blocks every cell beyond a spec's
+own grid bounds).
+
+Implementation selection differs from `pareto_dom` on purpose: this op
+sits on the *default* layout path (every `route()` call), so on
+non-TPU backends it runs the jitted jnp reference — Pallas interpret
+mode re-enters Python per while-loop step, which is fine for tests but
+not for a hot path.  On TPU the grid-batched Pallas kernel is used.
+Tests force the kernel with ``use_kernel=True`` (interpret mode off-TPU)
+and assert it matches the reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.maze_route.kernel import wavefront_kernel
+from repro.kernels.maze_route.ref import INF, wavefront_distance_ref
+
+_ref_jit = jax.jit(wavefront_distance_ref)
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def wavefront_distance(occ: jax.Array, seed: jax.Array, *,
+                       use_kernel: bool | None = None,
+                       interpret: bool | None = None) -> jax.Array:
+    """BFS distance field(s) for the Lee maze router.
+
+    occ, seed: (H, W) or (B, H, W) bool.  Returns int32 distances of the
+    same shape; seeds are 0 (even if occupied), blocked cells `INF`.
+    """
+    occ = jnp.asarray(occ)
+    seed = jnp.asarray(seed)
+    squeeze = occ.ndim == 2
+    if squeeze:
+        occ, seed = occ[None], seed[None]
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        out = _ref_jit(occ, seed)
+        return out[0] if squeeze else out
+    if interpret is None:
+        interpret = _should_interpret()
+    _, h, w = occ.shape
+    ph, pw = (-h) % 8, (-w) % 128
+    pad = [(0, 0), (0, ph), (0, pw)]
+    occ_p = jnp.pad(occ.astype(jnp.int8), pad, constant_values=1)
+    seed_p = jnp.pad(seed.astype(jnp.int8), pad, constant_values=0)
+    out = wavefront_kernel(occ_p, seed_p, interpret=interpret)[:, :h, :w]
+    return out[0] if squeeze else out

@@ -1,0 +1,127 @@
+"""Batched layout flow vs the sequential per-spec path.
+
+The contract (asserted per spec): identical placed rectangles, identical
+DRC verdict, identical routed/failed counts and wirelength — the batched
+path is the sequential path, vectorized, not an approximation of it.
+"""
+import numpy as np
+import pytest
+
+from repro.core.acim_spec import MacroSpec
+from repro.eda import netlist as nl
+from repro.eda.batched_flow import generate_layouts, stack_layout_operands
+from repro.eda.flow import generate_layout
+from repro.eda.placer import BatchDims, geometry
+
+# Mixed extents on purpose: every BatchDims axis gets real padding.
+SPECS = (MacroSpec(64, 16, 2, 3), MacroSpec(128, 32, 4, 3),
+         MacroSpec(256, 16, 8, 3), MacroSpec(128, 8, 4, 2),
+         MacroSpec(64, 8, 2, 5))
+
+
+@pytest.fixture(scope="module")
+def results():
+    return generate_layouts(SPECS), [generate_layout(s) for s in SPECS]
+
+
+class TestEquivalence:
+    def test_same_rects_per_spec(self, results):
+        bat, seq = results
+        for i, lr in enumerate(seq):
+            rb = {(r.name, r.cell, r.x, r.y, r.w, r.h)
+                  for r in bat.placements()[i].rects}
+            rs = {(r.name, r.cell, r.x, r.y, r.w, r.h)
+                  for r in lr.placement.rects}
+            assert rb == rs, SPECS[i]
+
+    def test_same_drc_verdict_per_spec(self, results):
+        bat, seq = results
+        for i, lr in enumerate(seq):
+            assert int(bat.drc_overlaps[i]) == lr.drc.overlaps
+            assert int(bat.drc_oob[i]) == lr.drc.out_of_bounds
+            assert bool(bat.drc_clean[i]) == lr.drc.clean
+            assert bat.drc_reports()[i] == lr.drc
+
+    def test_same_routing_per_spec(self, results):
+        bat, seq = results
+        for i, lr in enumerate(seq):
+            assert int(bat.routing.routed[i]) == len(lr.routing.wires)
+            assert int(bat.routing.failed[i]) == len(lr.routing.failed)
+            assert (int(bat.routing.wirelength[i])
+                    == lr.routing.total_wirelength)
+            assert (float(bat.routing.success_rate[i])
+                    == lr.routing.success_rate)
+
+    def test_metrics_rows_match(self, results):
+        bat, seq = results
+        for row, lr in zip(bat.metrics_rows(), seq):
+            m = lr.metrics()
+            assert set(row) == set(m)
+            for k in ("h", "w", "l", "b_adc", "routed_nets", "failed_nets",
+                      "route_success", "wirelength", "drc_clean"):
+                assert row[k] == m[k], k
+            for k in ("layout_area_f2_per_bit", "estimator_area_f2_per_bit",
+                      "area_model_error"):
+                assert row[k] == pytest.approx(m[k]), k
+
+    def test_netlist_stats_closed_form(self, results):
+        bat, seq = results
+        for i, lr in enumerate(seq):
+            assert bat.netlist_stats[i] == lr.netlist_stats
+            assert nl.stats_for_spec(SPECS[i]) == lr.netlist_stats
+
+
+class TestBatchedPlacement:
+    def test_operand_stack_shape(self):
+        ops = stack_layout_operands(SPECS, geometry())
+        for leaf in ops:
+            assert leaf.shape == (len(SPECS),)
+
+    def test_batch_dims_are_maxima(self):
+        d = BatchDims.for_specs(SPECS)
+        assert d.w == max(s.w for s in SPECS)
+        assert d.n_la == max(s.n_caps for s in SPECS)
+        assert d.l == max(s.l for s in SPECS)
+        assert d.b == max(s.b_adc for s in SPECS)
+
+    def test_single_spec_batch_matches_sequential(self):
+        spec = MacroSpec(64, 16, 2, 3)
+        bat = generate_layouts([spec])
+        lr = generate_layout(spec)
+        assert len(bat) == 1
+        row = bat.metrics_rows()[0]
+        m = lr.metrics()
+        assert row["wirelength"] == m["wirelength"]
+        assert row["drc_clean"] and m["drc_clean"]
+
+    def test_congestion_map_totals_wirelength(self, results):
+        bat, _ = results
+        # every routed path point increments exactly one occupancy cell
+        per_spec = bat.routing.occ_count.sum(axis=(1, 2))
+        np.testing.assert_array_equal(per_spec, bat.routing.wirelength)
+
+    def test_empty_batch_rejected(self):
+        with pytest.raises(ValueError):
+            generate_layouts([])
+
+
+class TestDistillAndLayout:
+    def test_explore_to_batched_layouts(self):
+        from repro.core.explorer import distill_and_layout
+
+        # agile distillation thresholds keep the laid-out batch small
+        distilled, layouts = distill_and_layout(
+            4096, pop_size=48, generations=10, seed=0,
+            min_tops=0.5, min_snr_db=10.0)
+        assert len(distilled) == len(layouts) >= 2
+        rows = layouts.metrics_rows()
+        assert all(r["drc_clean"] for r in rows)
+        assert [(r["h"], r["w"], r["l"], r["b_adc"]) for r in rows] \
+            == [s.as_tuple() for s in distilled.specs]
+
+    def test_overfiltered_raises(self):
+        from repro.core.explorer import distill_and_layout
+
+        with pytest.raises(ValueError):
+            distill_and_layout(4096, pop_size=32, generations=5,
+                               min_tops=1e9)

@@ -27,6 +27,11 @@ class TestNetlist:
         # caps + switches + comparator
         assert len(rbl.pins) >= SMALL.n_caps + 1
 
+    @pytest.mark.parametrize("spec", [SMALL, MED, MacroSpec(128, 128, 2, 3),
+                                      MacroSpec(512, 32, 8, 3)])
+    def test_closed_form_stats_match_generate(self, spec):
+        assert nl.stats_for_spec(spec) == nl.generate(spec).stats()
+
 
 class TestPlacer:
     @pytest.mark.parametrize("spec", [SMALL, MED, MacroSpec(128, 128, 2, 3)])

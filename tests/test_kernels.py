@@ -11,6 +11,9 @@ from repro.core import pareto
 from repro.core.acim_spec import MacroSpec
 from repro.kernels.acim_matmul import (acim_matmul, acim_matmul_ref,
                                        acim_matmul_ste, mismatch_weights)
+from repro.kernels.maze_route import (INF, wavefront_distance,
+                                      wavefront_distance_ref)
+from repro.kernels.maze_route.ref import relax_once
 from repro.kernels.pareto_dom import (dominance_matrix, dominance_matrix_ref,
                                       non_dominated_rank, rank_and_crowd)
 
@@ -116,3 +119,61 @@ class TestFusedRank:
         crowd_ref = pareto.crowding_distance(f, ranks_ref)
         np.testing.assert_array_equal(np.asarray(ranks), np.asarray(ranks_ref))
         np.testing.assert_allclose(np.asarray(crowd), np.asarray(crowd_ref))
+
+
+class TestMazeRoute:
+    """Wavefront (parallel BFS) kernel vs the sweeping jnp oracle."""
+
+    def _random_case(self, key, h, w, p_occ=0.3, n_seeds=1):
+        ko, ks = jax.random.split(jax.random.key(key))
+        occ = jax.random.uniform(ko, (h, w)) < p_occ
+        flat = jax.random.choice(ks, h * w, (n_seeds,), replace=False)
+        seed = jnp.zeros((h, w), bool).at[flat // w, flat % w].set(True)
+        return occ, seed
+
+    @pytest.mark.parametrize("h,w", [(2, 2), (5, 9), (16, 128), (23, 40),
+                                     (8, 200)])
+    def test_kernel_matches_ref(self, h, w):
+        occ, seed = self._random_case(h * 131 + w, h, w)
+        np.testing.assert_array_equal(
+            np.asarray(wavefront_distance(occ, seed, use_kernel=True)),
+            np.asarray(wavefront_distance_ref(occ, seed)))
+
+    def test_batched_grids(self):
+        occ = jax.random.uniform(jax.random.key(0), (4, 11, 19)) < 0.25
+        seed = jnp.zeros((4, 11, 19), bool).at[:, 0, 0].set(True)
+        np.testing.assert_array_equal(
+            np.asarray(wavefront_distance(occ, seed, use_kernel=True)),
+            np.asarray(wavefront_distance_ref(occ, seed)))
+
+    def test_sweeping_fixed_point_is_relaxation_fixed_point(self):
+        # BFS distances are the unique fixed point of the Jacobi step the
+        # Pallas kernel iterates; the sweeping oracle must land on it.
+        occ, seed = self._random_case(7, 13, 17, p_occ=0.4)
+        dist = wavefront_distance_ref(occ, seed)
+        free = ~occ & ~seed
+        np.testing.assert_array_equal(np.asarray(relax_once(dist, free)),
+                                      np.asarray(dist))
+
+    def test_walled_off_region_unreachable(self):
+        occ = jnp.zeros((7, 7), bool).at[:, 3].set(True)
+        seed = jnp.zeros((7, 7), bool).at[3, 0].set(True)
+        d = np.asarray(wavefront_distance(occ, seed, use_kernel=True))
+        assert (d[:, 4:] == INF).all()          # right of the wall
+        assert (d[:, :3] < INF).all()           # left side fully reached
+        assert d[3, 0] == 0
+
+    def test_occupied_seed_still_expands(self):
+        # a router hub on a full track is enterable (distance 0) and the
+        # wavefront still leaves it — matching the old host BFS
+        occ = jnp.zeros((4, 6), bool).at[1, 1].set(True)
+        seed = jnp.zeros((4, 6), bool).at[1, 1].set(True)
+        d = np.asarray(wavefront_distance(occ, seed, use_kernel=True))
+        assert d[1, 1] == 0 and d[1, 2] == 1 and d[0, 1] == 1
+
+    def test_multi_source(self):
+        occ, seed = self._random_case(21, 12, 18, p_occ=0.2, n_seeds=3)
+        d = np.asarray(wavefront_distance(occ, seed, use_kernel=True))
+        np.testing.assert_array_equal(
+            d, np.asarray(wavefront_distance_ref(occ, seed)))
+        assert (d[np.asarray(seed)] == 0).all()
