@@ -3,8 +3,10 @@ sweep.
 
 Times `explore_sizes`-style sequential exploration (one `nsga2.run`
 dispatch per (size, seed) cell, per-cell operand building on the host)
-against `explore_batch` (one vmapped device program for the whole sweep),
-and counts traces of the generation program via the
+against the coalescing front door (`repro.serve.design_service
+.DesignService`: every (size, seed) cell submitted as a `DesignRequest`
+and folded into one vmapped device program for the whole sweep), and
+counts traces of the generation program via the
 `nsga2.TRACE_COUNTS["run_cell"]` probe.  Two views are reported:
 
   * end-to-end cold — full sweep including compilation and Pareto-front
@@ -30,9 +32,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import DesignRequest
 from repro.core import explorer, nsga2
-from repro.core.batched_explorer import (explore_batch, stack_spaces,
-                                         sweep_program)
+from repro.core.batched_explorer import stack_spaces, sweep_program
+from repro.serve.design_service import DesignService
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
@@ -54,7 +57,15 @@ def _sequential_sweep(pop: int, gens: int):
 
 
 def _batched_sweep(pop: int, gens: int):
-    return explore_batch(SIZES, SEEDS, pop_size=pop, generations=gens)
+    """The unified-API path: every cell is a request, the service
+    coalesces all of them into one explorer dispatch."""
+    svc = DesignService(max_coalesce=len(SIZES) * len(SEEDS))
+    tickets = {(s, sd): svc.submit(DesignRequest(
+        array_size=s, seed=sd, pop_size=pop, generations=gens,
+        layout=False)) for s in SIZES for sd in SEEDS}
+    arts = svc.run()
+    assert svc.stats["explorer_dispatches"] == 1, dict(svc.stats)
+    return {c: arts[t].pareto for c, t in tickets.items()}
 
 
 def _cold(fn, *args):

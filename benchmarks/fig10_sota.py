@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import explorer
+from repro.api import DesignRequest, DesignSession
 from repro.core.pareto import non_dominated_mask
 import jax.numpy as jnp
 
@@ -26,9 +26,11 @@ PAPER_AREA_RANGE = (1500.0, 7500.0)
 
 
 def run(sizes=(4096, 16384, 65536)) -> dict:
+    fronts = DesignSession().fronts_for([
+        DesignRequest(array_size=s, seed=s + 17, pop_size=192,
+                      generations=60, layout=False) for s in sizes])
     ee, area = [], []
-    for s in sizes:
-        res = explorer.explore(s, pop_size=192, generations=60, seed=s + 17)
+    for res in fronts.values():
         ee.extend(res.metrics["tops_per_w"].tolist())
         area.extend(res.metrics["area_f2_per_bit"].tolist())
     ee = np.array(ee)

@@ -11,13 +11,18 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import estimator, explorer
+from repro.api import DesignRequest, DesignSession
+from repro.core import estimator
 
 
 def run(sizes=(4096, 16384, 65536), pop=192, gens=60) -> dict:
+    session = DesignSession()
+    fronts = session.fronts_for([
+        DesignRequest(array_size=s, seed=s, pop_size=pop, generations=gens,
+                      layout=False) for s in sizes])
     out = {}
-    for s in sizes:
-        res = explorer.explore(s, pop_size=pop, generations=gens, seed=s)
+    for req, res in fronts.items():
+        s = req.array_size
         m = res.metrics
         out[s] = {
             "n_pareto": len(res),

@@ -6,9 +6,10 @@ MOGA sweep one compiled program; this measures the other half of paper
 Fig. 4 — feeding the distilled Pareto set through placement / routing /
 DRC.  The sequential baseline is B independent `flow.generate_layout`
 calls (host netlist generation, named placement, one wavefront dispatch
-per net); the batched path is `eda.batched_flow.generate_layouts` (one
-vmapped placement dispatch, one scanned routing program expanding all B
-wavefronts together, closed-form netlist stats).  Two views:
+per net); the batched path is `repro.api.DesignSession.layout` over
+`eda.batched_flow.generate_layouts` (one vmapped placement dispatch,
+one scanned routing program expanding all B wavefronts together,
+closed-form netlist stats).  Two views:
 
   * end-to-end cold — includes compilation, what a fresh session pays;
   * warm — a second run with all programs compiled, the steady-state
@@ -33,8 +34,8 @@ import time
 
 import jax
 
+from repro.api import DesignSession
 from repro.core.acim_spec import MacroSpec
-from repro.eda.batched_flow import generate_layouts
 from repro.eda.flow import generate_layout
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -84,11 +85,12 @@ def run(smoke: bool = False) -> dict:
     seq = _sequential(specs)
     seq_warm = time.perf_counter() - t0
 
+    session = DesignSession()
     t0 = time.perf_counter()
-    bat = generate_layouts(specs)
+    bat = session.layout(specs)
     bat_cold = time.perf_counter() - t0
     t0 = time.perf_counter()
-    bat = generate_layouts(specs)
+    bat = session.layout(specs)
     bat_warm = time.perf_counter() - t0
 
     results_equal = ([_spec_summary_seq(lr) for lr in seq]

@@ -1,0 +1,135 @@
+"""Design-service benchmark: N coalesced requests vs N sequential sessions.
+
+The service-level counterpart of `benchmarks/explorer_bench.py` (which
+measures the raw sweep program) and `benchmarks/layout_bench.py` (the
+raw layout batch): this measures the multi-tenant front door end to end.
+The sequential baseline runs each `DesignRequest` in its own fresh
+`DesignSession` (one explorer dispatch per request, one whole-batch
+layout per request — the legacy `explore` -> `filter` ->
+`generate_layouts` shape); the coalesced side submits all N requests to
+one `DesignService`, which folds them into a single explorer dispatch
+and lays the union of surviving specs out in routing-grid-shape buckets.
+
+Two views per side:
+
+  * cold — fresh process caches (`jax.clear_caches()` first): what a
+    fresh fleet pays, including compilation;
+  * warm — the same requests resubmitted to the same service / sessions:
+    front-cache hits, steady-state relayout only.
+
+Compile counts come from the `nsga2.TRACE_COUNTS["run_cell"]` probe and
+the session dispatch counters.  Results land in `BENCH_service.json` at
+the repo root so future PRs have a perf trajectory.
+
+  PYTHONPATH=src python -m benchmarks.service_bench [--smoke] [--out PATH]
+
+`--smoke` shrinks the request set and MOGA budget for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import platform
+import time
+
+import jax
+
+from repro.api import DesignRequest, DesignSession, Requirements
+from repro.core import nsga2
+from repro.serve.design_service import DesignService
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+REQUIREMENTS = Requirements(min_tops=0.5, min_snr_db=10.0)
+REQUIREMENTS_FULL = Requirements(min_tops=0.5, min_snr_db=15.0)
+
+
+def _requests(smoke: bool) -> list[DesignRequest]:
+    sizes, seeds = ((4096,), (0, 1)) if smoke else \
+        ((4096, 8192), (0, 1, 2))
+    pop, gens = (48, 8) if smoke else (192, 60)
+    reqs = REQUIREMENTS if smoke else REQUIREMENTS_FULL
+    return [DesignRequest(array_size=s, seed=sd, pop_size=pop,
+                          generations=gens, requirements=reqs, layout=True)
+            for s in sizes for sd in seeds]
+
+
+def _sequential(requests, sessions=None):
+    """One fresh session per request: the pre-coalescing baseline."""
+    sessions = sessions or [DesignSession() for _ in requests]
+    arts = [ses.run(req) for ses, req in zip(sessions, requests)]
+    return arts, sessions
+
+
+def _coalesced(requests, service=None):
+    service = service or DesignService(max_coalesce=len(requests))
+    tickets = [service.submit(r) for r in requests]
+    done = service.run()
+    return [done[t] for t in tickets], service
+
+
+def _timed(fn, *args):
+    n0 = nsga2.TRACE_COUNTS["run_cell"]
+    t0 = time.perf_counter()
+    out, state = fn(*args)
+    return out, state, time.perf_counter() - t0, \
+        nsga2.TRACE_COUNTS["run_cell"] - n0
+
+
+def run(smoke: bool = False) -> dict:
+    requests = _requests(smoke)
+
+    jax.clear_caches()
+    seq, sessions, seq_cold, seq_traces = _timed(_sequential, requests)
+    _, _, seq_warm, _ = _timed(_sequential, requests, sessions)
+    seq_dispatches = sum(s.stats["explorer_dispatches"] for s in sessions)
+
+    jax.clear_caches()
+    bat, service, bat_cold, bat_traces = _timed(_coalesced, requests)
+    _, _, bat_warm, _ = _timed(_coalesced, requests, service)
+
+    artifacts_equal = all(a.summary() == b.summary()
+                          for a, b in zip(seq, bat))
+    return {
+        "n_requests": len(requests),
+        "requests": [r.to_dict() for r in requests],
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "sequential": {"cold_s": seq_cold, "warm_s": seq_warm,
+                       "run_cell_traces": seq_traces,
+                       "explorer_dispatches": seq_dispatches},
+        "coalesced": {"cold_s": bat_cold, "warm_s": bat_warm,
+                      "run_cell_traces": bat_traces,
+                      "explorer_dispatches":
+                          int(service.stats["explorer_dispatches"]),
+                      "layout_bucket_dispatches":
+                          int(service.stats["layout_dispatches"])},
+        "coalesced_speedup_cold": seq_cold / bat_cold,
+        "coalesced_speedup_warm": seq_warm / bat_warm,
+        "artifacts_equal": artifacts_equal,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small request set / MOGA budget for CI")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_service.json"))
+    args = ap.parse_args()
+    result = run(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    for side in ("sequential", "coalesced"):
+        r = result[side]
+        print(f"{side}: cold={r['cold_s']:.3f}s warm={r['warm_s']:.3f}s "
+              f"traces={r['run_cell_traces']} "
+              f"dispatches={r['explorer_dispatches']}")
+    print(f"speedup cold={result['coalesced_speedup_cold']:.2f}x "
+          f"warm={result['coalesced_speedup_warm']:.2f}x "
+          f"artifacts_equal={result['artifacts_equal']} -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

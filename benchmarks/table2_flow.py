@@ -11,13 +11,16 @@ from __future__ import annotations
 
 import time
 
-from repro.core import explorer
+from repro.api import DesignRequest, DesignSession
 from repro.eda.flow import generate_layout
 
 
 def run() -> dict:
+    session = DesignSession()
+    req = DesignRequest(array_size=16384, pop_size=192, generations=60,
+                        layout=False)
     t0 = time.time()
-    res = explorer.explore(16384, pop_size=192, generations=60)
+    res = session.run(req).pareto
     t_explore = time.time() - t0
 
     sel = res.filter(min_tops=0.5).specs[:2] or res.specs[:2]

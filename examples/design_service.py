@@ -1,0 +1,55 @@
+"""Multi-tenant design service demo: concurrent users, one dispatch.
+
+Several tenants submit different `DesignRequest`s — different array
+sizes, seeds, and application requirements — and the `DesignService`
+coalesces them: one compiled MOGA sweep program runs every tenant's
+cell in a single device dispatch, and the union of surviving specs is
+laid out in routing-grid-shape buckets before being demuxed back into
+per-ticket artifacts.
+
+  PYTHONPATH=src python examples/design_service.py
+"""
+from repro.api import DesignRequest, Requirements
+from repro.serve.design_service import DesignService
+
+TENANTS = {
+    "edge-snr": DesignRequest(
+        array_size=4096, pop_size=96, generations=30,
+        requirements=Requirements(min_snr_db=20.0)),
+    "edge-tops": DesignRequest(
+        array_size=4096, pop_size=96, generations=30, seed=1,
+        requirements=Requirements(min_tops=0.5, min_snr_db=15.0)),
+    # screening query: Pareto front only, no layouts
+    "cloud-eff": DesignRequest(
+        array_size=16384, pop_size=96, generations=30,
+        requirements=Requirements(min_tops_per_w=100.0), layout=False),
+}
+
+
+def main() -> None:
+    svc = DesignService()
+    tickets = {name: svc.submit(req) for name, req in TENANTS.items()}
+    done = svc.run()
+
+    for name, ticket in tickets.items():
+        art = done[ticket]
+        p = art.provenance
+        if not art.ok or not len(art.pareto):
+            print(f"{name:10s} ticket={ticket} | no surviving solution "
+                  f"({art.error or 'requirements removed every point'})")
+            continue
+        best = art.pareto.best("tops_per_w")
+        laid = ("front only" if art.layout_rows is None
+                else f"{p.layout_dispatches} layout bucket(s)")
+        print(f"{name:10s} ticket={ticket} | {len(art.pareto)} survivors, "
+              f"best H={best.h} W={best.w} L={best.l} B={best.b_adc} | "
+              f"coalesced with {p.coalesced - 1} other request(s), {laid}")
+    s = svc.stats
+    print(f"\nservice: {s['requests_served']} requests -> "
+          f"{s['explorer_dispatches']} explorer dispatch(es), "
+          f"{s['run_cell_traces']} sweep-program trace(s), "
+          f"{s['layout_dispatches']} layout bucket dispatch(es)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,18 +1,19 @@
 """Reproduce the paper's Fig. 8: three 16 kb ACIM layouts at different
 design specifications, through the *batched* layout path — netlist stats,
 placement, routing and DRC for all three specs in one dispatch chain
-(`repro.eda.batched_flow.generate_layouts`), the way a distilled Pareto
-set is laid out.  Pass --full to also run the sequential
-`generate_layout` per spec and export full GDS-like JSON (named cells +
-wire geometry), which the batched path intentionally skips.
+(`repro.api.DesignSession.layout`), the way a distilled Pareto set is
+laid out.  Pass --full to also run the sequential `generate_layout` per
+spec and export full GDS-like JSON (named cells + wire geometry), which
+the batched path intentionally skips.
 
   PYTHONPATH=src python examples/layout_flow.py [--full]
 """
 import pathlib
 import sys
+import time
 
+from repro.api import DesignSession
 from repro.core.acim_spec import MacroSpec
-from repro.eda.batched_flow import generate_layouts
 from repro.eda.flow import generate_layout
 
 # (spec, paper TOPS, paper F^2/bit) — see benchmarks/fig8_layouts.py
@@ -28,7 +29,9 @@ OUT = pathlib.Path("runs/fig8")
 def main() -> None:
     OUT.mkdir(parents=True, exist_ok=True)
     specs = [spec for spec, _, _ in PAPER.values()]
-    res = generate_layouts(specs)
+    t0 = time.perf_counter()
+    res = DesignSession().layout(specs)
+    elapsed = time.perf_counter() - t0
     res.to_json(OUT / "fig8_batched.json")
     for (tag, (spec, _, paper_area)), m in zip(PAPER.items(),
                                                res.metrics_rows()):
@@ -36,7 +39,7 @@ def main() -> None:
               f"layout {m['layout_area_f2_per_bit']:.0f} F^2/bit "
               f"(paper {paper_area:.0f}), routed {m['routed_nets']} nets, "
               f"DRC clean={m['drc_clean']}")
-    print(f"batched: {len(specs)} layouts in {res.elapsed_s:.1f}s "
+    print(f"batched: {len(specs)} layouts in {elapsed:.1f}s "
           f"-> {OUT}/fig8_batched.json")
     if "--full" in sys.argv[1:]:
         for tag, (spec, _, _) in PAPER.items():

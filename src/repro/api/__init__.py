@@ -1,0 +1,35 @@
+"""`repro.api` — the unified front-end for the EasyACIM flow.
+
+One declarative request type, one long-lived session, one service:
+
+    from repro.api import DesignRequest, DesignSession, Requirements
+
+    req = DesignRequest(array_size=16384,
+                        requirements=Requirements(min_tops=1.0))
+    artifact = DesignSession().run(req)
+    artifact.to_json("artifact.json")
+
+`DesignRequest` captures the whole query (MOGA budget, calibration,
+backend knobs, application requirements, layout options);
+`DesignSession` owns the compiled-program and Pareto-front caches;
+`repro.serve.design_service.DesignService` adds the queue-backed
+multi-tenant layer (request coalescing, grid-shape layout bucketing).
+The legacy entry points (`repro.core.explorer.explore` and friends)
+survive as thin deprecation shims over this package.
+"""
+from repro.api.request import DesignRequest, Requirements
+from repro.api.session import DesignArtifact, DesignSession, Provenance
+
+_DEFAULT_SESSION: DesignSession | None = None
+
+
+def default_session() -> DesignSession:
+    """Process-wide session backing the legacy shims."""
+    global _DEFAULT_SESSION
+    if _DEFAULT_SESSION is None:
+        _DEFAULT_SESSION = DesignSession()
+    return _DEFAULT_SESSION
+
+
+__all__ = ["DesignRequest", "Requirements", "DesignArtifact",
+           "DesignSession", "Provenance", "default_session"]

@@ -1,0 +1,337 @@
+"""Compiled-program sessions: long-lived, cache-owning request execution.
+
+`DesignSession` is the single supported way to run a `DesignRequest`
+end to end.  It owns two caches:
+
+  * a *program cache* keyed by `DesignRequest.shape_signature()` — one
+    entry per compiled sweep program.  Array size, seed, and calibration
+    are traced operands (`repro.core.nsga2.SpaceOperands`), so a repeat
+    request or a signature-compatible variant request dispatches the
+    cached program with **zero new traces** (observable through the
+    `repro.core.nsga2.TRACE_COUNTS` probe, recorded per run in the
+    artifact provenance);
+  * a *front cache* keyed by `DesignRequest.explore_key()` — the
+    distillation-independent Pareto front, so a repeat query (or the
+    same exploration under different application requirements) costs no
+    device dispatch at all.
+
+`run()` executes one request; `run_many()` executes a batch and is the
+coalescing engine `repro.serve.design_service.DesignService` drives:
+requests in the same `explore_group()` fold into ONE `explore_cells`
+dispatch, and (under `bucket_layouts=True`) the surviving specs of all
+requests are laid out in routing-grid-shape buckets (shapes quantized
+to powers of two so bucketing cannot degenerate into per-spec
+dispatches) — heterogeneous Pareto sets no longer pay padded-batch
+waste for the biggest member — then demuxed back to per-request
+artifacts.
+
+Timing lives here, in the artifact provenance, not in the library flow
+modules: `repro.eda.batched_flow` is pure compute.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import json
+import time
+from typing import Iterable
+
+from repro.core import nsga2
+from repro.core.batched_explorer import explore_cells, sweep_program
+from repro.core.explorer import ParetoResult
+from repro.api.request import DesignRequest
+from repro.core.acim_spec import MacroSpec
+from repro.eda.batched_flow import BatchedLayoutResult, generate_layouts
+
+
+@dataclasses.dataclass(frozen=True)
+class Provenance:
+    """How an artifact was produced (the session's receipt).
+
+    Wall-clock fields are this request's *fair share* of the shared
+    work (an explorer dispatch split over the requests it coalesced, a
+    layout bucket split over the specs it laid out), so summing
+    `total_s` across a batch's artifacts approximates the real cost
+    instead of multiply-counting it.  Count fields are dispatch-scoped:
+    coalesced requests served by the same dispatch all report its
+    trace/dispatch counts (dedupe by dispatch — e.g. keep one artifact
+    per `coalesced` group — before summing them)."""
+
+    request_sha: str
+    explore_s: float            # fair share of the exploration dispatch
+    layout_s: float             # fair share of the layout buckets touched
+    total_s: float
+    new_traces: int             # run_cell traces of the serving dispatch
+    explorer_dispatches: int    # 0 when served from the front cache
+    layout_dispatches: int      # grid-shape buckets this request touched
+    front_cache_hit: bool
+    coalesced: int              # requests sharing the exploration (>= 1)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DesignArtifact:
+    """The uniform result of one request: distilled front + layouts +
+    provenance.
+
+    `layout_rows` is the serializable layout product (one metrics row
+    per spec, aligned with `pareto.specs`); `layouts` additionally holds
+    the in-memory `BatchedLayoutResult` tensors when the request was
+    laid out as a single batch (it is dropped by JSON round-trips and
+    by the bucketed multi-tenant path).  `error` is set instead of
+    raising on the non-strict (multi-tenant) path when the request's
+    requirements removed every Pareto point.
+    """
+
+    request: DesignRequest
+    pareto: ParetoResult                      # distilled frontier
+    layout_rows: tuple[dict, ...] | None      # aligned with pareto.specs
+    provenance: Provenance
+    layouts: BatchedLayoutResult | None = dataclasses.field(
+        default=None, repr=False)
+    error: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+    def summary(self) -> dict:
+        """Provenance-free content view, for equality checks."""
+        return {"array_size": self.pareto.array_size,
+                "specs": [s.as_tuple() for s in self.pareto.specs],
+                "front": self.pareto.to_rows(),
+                "layout": (None if self.layout_rows is None
+                           else list(self.layout_rows))}
+
+    def to_json(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump({"request": self.request.to_dict(),
+                       "pareto": {"array_size": self.pareto.array_size,
+                                  "points": self.pareto.to_rows()},
+                       "layout_rows": (None if self.layout_rows is None
+                                       else list(self.layout_rows)),
+                       "provenance": dataclasses.asdict(self.provenance),
+                       "error": self.error},
+                      f, indent=1)
+
+    @classmethod
+    def from_json(cls, path) -> "DesignArtifact":
+        with open(path) as f:
+            d = json.load(f)
+        rows = d["layout_rows"]
+        return cls(request=DesignRequest.from_dict(d["request"]),
+                   pareto=ParetoResult.from_rows(d["pareto"]["array_size"],
+                                                 d["pareto"]["points"]),
+                   layout_rows=None if rows is None else tuple(rows),
+                   provenance=Provenance(**d["provenance"]),
+                   error=d.get("error"))
+
+
+@functools.lru_cache(maxsize=None)
+def _grid_sig(spec: MacroSpec, coarse: int) -> tuple[int, int]:
+    """Routing-grid shape of a spec's macro, without placing it."""
+    from repro.eda.placer import geometry, layout_operands
+    from repro.eda.router import grid_shape
+
+    ops = layout_operands(spec, geometry())
+    return grid_shape(int(ops.width), int(ops.height), coarse)
+
+
+def _bucket_key(spec: MacroSpec, coarse: int, capacity: int) -> tuple:
+    """Layout-bucket key: the routing-grid shape quantized to the next
+    power of two per axis.  Exact-shape buckets would degenerate to one
+    dispatch (and one compile) per distinct spec on heterogeneous
+    fronts; quantizing bounds the padded-cell waste at <2x per axis
+    while keeping the bucket count logarithmic in the shape spread."""
+    gh, gw = _grid_sig(spec, coarse)
+    return (coarse, capacity,
+            1 << (gh - 1).bit_length(), 1 << (gw - 1).bit_length())
+
+
+class _SweepProgram:
+    """One program-cache entry: the compiled sweep for a shape signature."""
+
+    def __init__(self, request: DesignRequest):
+        self.statics = nsga2.EvolveStatics(
+            pop_size=request.pop_size,
+            crossover_prob=request.crossover_prob,
+            mutation_prob=request.mutation_prob,
+            use_pallas_dominance=request.use_pallas_dominance,
+            use_pallas_rank=request.use_pallas_rank)
+        self.n_gens = request.generations
+        self.fn = functools.partial(sweep_program, statics=self.statics,
+                                    n_gens=self.n_gens)
+        self.dispatches = 0
+
+
+class DesignSession:
+    """Long-lived request executor owning the program and front caches."""
+
+    def __init__(self):
+        self._programs: dict[tuple, _SweepProgram] = {}
+        self._fronts: dict[tuple, ParetoResult] = {}
+        self.stats: collections.Counter = collections.Counter()
+
+    # -- program cache ---------------------------------------------------
+    def program_for(self, request: DesignRequest) -> _SweepProgram:
+        sig = request.shape_signature()
+        prog = self._programs.get(sig)
+        if prog is None:
+            prog = self._programs[sig] = _SweepProgram(request)
+            self.stats["program_cache_misses"] += 1
+        else:
+            self.stats["program_cache_hits"] += 1
+        return prog
+
+    # -- exploration (coalesced across requests) -------------------------
+    def _fronts_for(self, requests: list[DesignRequest]):
+        """Resolve every request's (undistilled) front; missing fronts of
+        the same explore group fold into one dispatch.  Returns
+        (fronts, per-request explore info)."""
+        info = {r: {"explore_s": 0.0, "new_traces": 0, "dispatches": 0,
+                    "cache_hit": True, "coalesced": 1} for r in requests}
+        pending: dict[tuple, list[DesignRequest]] = {}
+        for r in requests:
+            if r.explore_key() in self._fronts:
+                self.stats["front_cache_hits"] += 1
+            else:
+                pending.setdefault(r.explore_group(), []).append(r)
+        for group in pending.values():
+            r0 = group[0]
+            cells = list(dict.fromkeys(r.cell for r in group))
+            prog = self.program_for(r0)
+            n0 = nsga2.TRACE_COUNTS["run_cell"]
+            t0 = time.perf_counter()
+            fronts = explore_cells(cells, pop_size=r0.pop_size,
+                                   generations=r0.generations,
+                                   crossover_prob=r0.crossover_prob,
+                                   mutation_prob=r0.mutation_prob, cal=r0.cal,
+                                   use_pallas_dominance=r0.use_pallas_dominance,
+                                   use_pallas_rank=r0.use_pallas_rank,
+                                   program=prog.fn)
+            dt = time.perf_counter() - t0
+            traces = nsga2.TRACE_COUNTS["run_cell"] - n0
+            prog.dispatches += 1
+            self.stats["explorer_dispatches"] += 1
+            self.stats["run_cell_traces"] += traces
+            for cell, front in fronts.items():
+                key = r0.explore_group() + cell
+                self._fronts[key] = front
+            for r in group:
+                info[r] = {"explore_s": dt / len(group), "new_traces": traces,
+                           "dispatches": 1, "cache_hit": False,
+                           "coalesced": len(group)}
+        return {r: self._fronts[r.explore_key()] for r in requests}, info
+
+    def fronts_for(self, requests: Iterable[DesignRequest]
+                   ) -> dict[DesignRequest, ParetoResult]:
+        """Coalesced exploration only (no distillation, no layout)."""
+        fronts, _ = self._fronts_for(list(requests))
+        return fronts
+
+    # -- layout ----------------------------------------------------------
+    def layout(self, specs, *, coarse: int = 64,
+               capacity: int = 4) -> BatchedLayoutResult:
+        """One batched layout dispatch chain for a spec set."""
+        self.stats["layout_dispatches"] += 1
+        return generate_layouts(specs, coarse=coarse, capacity=capacity)
+
+    def _bucketed_rows(self, requests, distilled):
+        """Lay out the union of surviving specs in quantized grid-shape
+        buckets.  Returns ({(coarse, capacity, spec): metrics row},
+        {bucket key: per-spec wall-clock share})."""
+        buckets: dict[tuple, dict] = {}
+        for r in requests:
+            if not r.layout:
+                continue
+            for spec in distilled[r].specs:
+                key = _bucket_key(spec, r.coarse, r.capacity)
+                buckets.setdefault(key, {})[spec] = None
+        rows: dict[tuple, dict] = {}
+        spec_share: dict[tuple, float] = {}
+        for key, specs in buckets.items():
+            coarse, capacity = key[0], key[1]
+            t0 = time.perf_counter()
+            res = self.layout(tuple(specs), coarse=coarse, capacity=capacity)
+            spec_share[key] = (time.perf_counter() - t0) / len(specs)
+            for spec, row in zip(res.specs, res.metrics_rows()):
+                rows[(coarse, capacity, spec)] = row
+        return rows, spec_share
+
+    # -- the end-to-end run ----------------------------------------------
+    def run_many(self, requests: Iterable[DesignRequest], *,
+                 bucket_layouts: bool = True, strict: bool = True
+                 ) -> dict[DesignRequest, DesignArtifact]:
+        """Execute a request batch: one coalesced exploration dispatch per
+        explore group, then grid-shape-bucketed (or per-request) layout,
+        demuxed into per-request artifacts.
+
+        A request whose requirements remove every Pareto point raises
+        `ValueError` under `strict=True`; under `strict=False` (the
+        multi-tenant path) it gets an artifact with `error` set and the
+        rest of the batch is served normally."""
+        requests = list(dict.fromkeys(requests))
+        fronts, info = self._fronts_for(requests)
+        distilled: dict[DesignRequest, ParetoResult] = {}
+        errors: dict[DesignRequest, str] = {}
+        for r in requests:
+            d = (fronts[r] if r.requirements.is_noop
+                 else fronts[r].filter(**r.requirements.as_filter_kwargs()))
+            if r.layout and not len(d):
+                msg = (f"requirements {r.requirements} removed every Pareto "
+                       f"point for request {r.sha()} "
+                       f"(array_size={r.array_size}); relax them or set "
+                       f"layout=False")
+                if strict:
+                    raise ValueError(msg)
+                errors[r] = msg
+            distilled[r] = d
+
+        laid = [r for r in requests if r.layout and r not in errors]
+        results: dict[DesignRequest, BatchedLayoutResult | None] = \
+            {r: None for r in requests}
+        rows_for: dict[DesignRequest, tuple[dict, ...] | None] = \
+            {r: None for r in requests}
+        layout_s = {r: 0.0 for r in requests}
+        buckets_for = {r: 0 for r in requests}
+        if bucket_layouts:
+            rows, spec_share = self._bucketed_rows(laid, distilled)
+            for r in laid:
+                keys = [_bucket_key(s, r.coarse, r.capacity)
+                        for s in distilled[r].specs]
+                rows_for[r] = tuple(rows[(r.coarse, r.capacity, s)]
+                                    for s in distilled[r].specs)
+                buckets_for[r] = len(set(keys))
+                layout_s[r] = sum(spec_share[k] for k in keys)
+        else:
+            for r in laid:
+                t0 = time.perf_counter()
+                res = self.layout(distilled[r].specs, coarse=r.coarse,
+                                  capacity=r.capacity)
+                layout_s[r] = time.perf_counter() - t0
+                results[r] = res
+                rows_for[r] = tuple(res.metrics_rows())
+                buckets_for[r] = 1
+
+        out = {}
+        for r in requests:
+            i = info[r]
+            prov = Provenance(
+                request_sha=r.sha(), explore_s=i["explore_s"],
+                layout_s=layout_s[r],
+                total_s=i["explore_s"] + layout_s[r],
+                new_traces=i["new_traces"],
+                explorer_dispatches=i["dispatches"],
+                layout_dispatches=buckets_for[r],
+                front_cache_hit=i["cache_hit"], coalesced=i["coalesced"])
+            out[r] = DesignArtifact(request=r, pareto=distilled[r],
+                                    layout_rows=rows_for[r],
+                                    provenance=prov, layouts=results[r],
+                                    error=errors.get(r))
+        self.stats["requests_served"] += len(out)
+        return out
+
+    def run(self, request: DesignRequest) -> DesignArtifact:
+        """Execute one request end to end (single-batch layout, so the
+        artifact carries the full `BatchedLayoutResult`)."""
+        return self.run_many([request], bucket_layouts=False)[request]

@@ -43,6 +43,53 @@ def stack_spaces(spaces) -> nsga2.SpaceOperands:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *spaces)
 
 
+def explore_cells(cells, *, pop_size: int = 256, generations: int = 80,
+                  crossover_prob: float = nsga2.DEFAULT_CROSSOVER_PROB,
+                  mutation_prob: float = nsga2.DEFAULT_MUTATION_PROB,
+                  cal: CalibConstants = CAL28,
+                  use_pallas_dominance: bool = False,
+                  use_pallas_rank: bool = False,
+                  program=None) -> dict:
+    """Sweep an explicit (array_size, seed) cell list in one device program.
+
+    The engine entry point under `repro.api.DesignSession` (which coalesces
+    concurrent requests into one cell list) and `explore_batch` (which
+    crosses sizes x seeds).  Returns {(array_size, seed): ParetoResult} —
+    per-cell deduplicated Pareto fronts, identical to what the sequential
+    per-size path (`nsga2.run` + the legacy `explorer.explore`) produces
+    for the same cell.
+
+    `program` optionally injects a pre-built sweep callable
+    (keys, spaces) -> (genes, objs) — the session's program cache — and
+    defaults to the module-level `sweep_program`.
+    """
+    from repro.core import explorer  # deferred: explorer wraps this module
+
+    cells = list(dict.fromkeys((int(s), int(sd)) for s, sd in cells))
+    if not cells:
+        raise ValueError("explore_cells needs at least one (size, seed) cell")
+    if program is None:
+        statics = nsga2.EvolveStatics(
+            pop_size=pop_size, crossover_prob=crossover_prob,
+            mutation_prob=mutation_prob,
+            use_pallas_dominance=use_pallas_dominance,
+            use_pallas_rank=use_pallas_rank)
+        program = functools.partial(sweep_program, statics=statics,
+                                    n_gens=generations)
+    spaces = stack_spaces([
+        nsga2.space_operands(nsga2.NSGA2Config(array_size=s, cal=cal))
+        for s, _ in cells])
+    keys = jnp.stack([jax.random.key(sd) for _, sd in cells])
+    genes_b, objs_b = program(keys, spaces)
+    genes_b = np.asarray(genes_b)
+    objs_b = np.asarray(objs_b)
+    return {
+        (s, sd): explorer.pareto_result_from_population(
+            s, genes_b[i], objs_b[i], cal=cal)
+        for i, (s, sd) in enumerate(cells)
+    }
+
+
 def explore_batch(sizes=(4096, 16384, 65536), seeds=(0,), *,
                   pop_size: int = 256, generations: int = 80,
                   crossover_prob: float = nsga2.DEFAULT_CROSSOVER_PROB,
@@ -52,34 +99,17 @@ def explore_batch(sizes=(4096, 16384, 65536), seeds=(0,), *,
                   use_pallas_rank: bool = False) -> dict:
     """Sweep every (array_size, seed) cell in one compiled device program.
 
-    Returns {(array_size, seed): ParetoResult} — per-cell deduplicated
-    Pareto fronts, identical to what the sequential per-size path
-    (`nsga2.run` + `explorer.explore`) produces for the same cell.
+    Thin cross-product wrapper over `explore_cells`.
     """
-    from repro.core import explorer  # deferred: explorer wraps this module
-
     sizes = tuple(int(s) for s in sizes)
     seeds = tuple(int(s) for s in seeds)
-    cells = [(s, sd) for s in sizes for sd in seeds]
-    if not cells:
+    if not sizes or not seeds:
         raise ValueError(
             f"explore_batch needs at least one (size, seed) cell; got "
             f"sizes={sizes!r}, seeds={seeds!r}")
-    statics = nsga2.EvolveStatics(
-        pop_size=pop_size, crossover_prob=crossover_prob,
-        mutation_prob=mutation_prob,
-        use_pallas_dominance=use_pallas_dominance,
-        use_pallas_rank=use_pallas_rank)
-    spaces = stack_spaces([
-        nsga2.space_operands(nsga2.NSGA2Config(array_size=s, cal=cal))
-        for s, _ in cells])
-    keys = jnp.stack([jax.random.key(sd) for _, sd in cells])
-    genes_b, objs_b = sweep_program(keys, spaces, statics=statics,
-                                    n_gens=generations)
-    genes_b = np.asarray(genes_b)
-    objs_b = np.asarray(objs_b)
-    return {
-        (s, sd): explorer.pareto_result_from_population(
-            s, genes_b[i], objs_b[i], cal=cal)
-        for i, (s, sd) in enumerate(cells)
-    }
+    return explore_cells([(s, sd) for s in sizes for sd in seeds],
+                         pop_size=pop_size, generations=generations,
+                         crossover_prob=crossover_prob,
+                         mutation_prob=mutation_prob, cal=cal,
+                         use_pallas_dominance=use_pallas_dominance,
+                         use_pallas_rank=use_pallas_rank)

@@ -23,7 +23,7 @@ import dataclasses
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import estimator, explorer
+from repro.core import estimator
 from repro.core.acim_spec import MacroSpec
 
 
@@ -109,10 +109,18 @@ class Recommendation:
 
 def recommend_macro(cfg: ArchConfig, *, array_size: int = 65536,
                     min_snr_db: float = 3.0, pop_size: int = 192,
-                    generations: int = 50, seed: int = 0) -> Recommendation:
-    res = explorer.explore(array_size, pop_size=pop_size,
-                           generations=generations, seed=seed)
-    res = res.filter(min_snr_db=min_snr_db)
+                    generations: int = 50, seed: int = 0,
+                    session=None) -> Recommendation:
+    """Score the explorer's Pareto set under the workload.  Pass a
+    `repro.api.DesignSession` to share its program/front caches across
+    architectures (the default session is used otherwise)."""
+    from repro.api import DesignRequest, Requirements, default_session
+
+    req = DesignRequest(array_size=array_size, seed=seed, pop_size=pop_size,
+                        generations=generations,
+                        requirements=Requirements(min_snr_db=min_snr_db),
+                        layout=False)
+    res = (session or default_session()).run(req).pareto
     if not len(res):
         raise ValueError("no Pareto point meets the SNR floor")
     gemms = extract_gemms(cfg)

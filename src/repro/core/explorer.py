@@ -8,18 +8,25 @@ requirements (min SNR, min throughput, max energy, max area) before handing
 the survivors to the netlist generator / placer / router
 (`repro.eda.flow.generate_layout`).
 
-One-compile sweep contract: `explore()` and `explore_sizes()` are thin
-wrappers over `repro.core.batched_explorer.explore_batch` — the array size,
-gene bounds, and calibration constants are traced operands of a single
+One-compile sweep contract: every front-end path bottoms out in
+`repro.core.batched_explorer.explore_cells` — the array size, gene
+bounds, and calibration constants are traced operands of a single
 compiled NSGA-II program (`repro.core.nsga2.run_cell`), so a whole
 (array_size x seed) sweep is one trace, one compile, and one device
 dispatch.  The per-cell fronts are identical to the sequential
 `nsga2.run` reference path.
+
+Front-end note: the supported way to drive the flow is `repro.api`
+(`DesignRequest` / `DesignSession` / the multi-tenant
+`repro.serve.design_service.DesignService`).  `explore()`,
+`explore_sizes()` and `distill_and_layout()` below are deprecation
+shims over it, kept for source compatibility.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +51,10 @@ class ParetoResult:
                min_tops_per_w: float = 0.0) -> "ParetoResult":
         """Agile user distillation of the Pareto set (paper Fig. 4, arrow
         'remove undesired solutions')."""
+        if not self.specs:
+            raise ValueError(
+                "cannot filter an empty Pareto frontier (an earlier filter "
+                "already removed every solution)")
         m = self.metrics
         keep = ((m["snr_db"] >= min_snr_db) & (m["tops"] >= min_tops)
                 & (m["energy_fj_per_mac"] <= max_energy_fj)
@@ -57,6 +68,10 @@ class ParetoResult:
         )
 
     def best(self, metric: str, maximize: bool = True) -> MacroSpec:
+        if not self.specs:
+            raise ValueError(
+                f"cannot select best({metric!r}) from an empty Pareto "
+                f"frontier; relax the filter requirements")
         v = self.metrics[metric]
         i = int(np.argmax(v) if maximize else np.argmin(v))
         return self.specs[i]
@@ -73,6 +88,26 @@ class ParetoResult:
         with open(path, "w") as f:
             json.dump({"array_size": self.array_size, "points": self.to_rows()},
                       f, indent=1)
+
+    @classmethod
+    def from_rows(cls, array_size: int, rows: list[dict]) -> "ParetoResult":
+        """Rebuild from `to_rows()` output.  Metric arrays come back as
+        float64 (exact widenings of the stored floats); an empty row list
+        yields an empty frontier with no metric columns."""
+        spec_keys = ("h", "w", "l", "b_adc")
+        specs = tuple(MacroSpec(*(int(r[k]) for k in spec_keys))
+                      for r in rows)
+        metric_keys = [k for k in (rows[0] if rows else {})
+                       if k not in spec_keys]
+        metrics = {k: np.array([r[k] for r in rows]) for k in metric_keys}
+        return cls(int(array_size), specs, metrics)
+
+    @classmethod
+    def from_json(cls, path: str) -> "ParetoResult":
+        """Inverse of `to_json`: load a frontier back from disk."""
+        with open(path) as f:
+            d = json.load(f)
+        return cls.from_rows(d["array_size"], d["points"])
 
 
 def _dedup_pareto(genes: np.ndarray, objs: np.ndarray):
@@ -100,31 +135,48 @@ def pareto_result_from_population(array_size: int, genes: np.ndarray,
     return ParetoResult(array_size, specs, metrics)
 
 
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.explorer.{old} is deprecated; use {new} "
+        f"(see docs/api.md)", DeprecationWarning, stacklevel=3)
+
+
 def explore(array_size: int, *, pop_size: int = 256, generations: int = 80,
             seed: int = 0, cal: CalibConstants = CAL28,
             use_pallas_dominance: bool = False,
             use_pallas_rank: bool = False) -> ParetoResult:
-    """Run the MOGA explorer for one array size (paper: < 30 min on a Xeon;
-    here: seconds, thanks to the fully vectorized generation step).
+    """Deprecated shim over `repro.api`: run the MOGA explorer for one
+    array size and return the (undistilled) `ParetoResult`.
 
-    Thin wrapper over `explore_batch` with a single (size, seed) cell."""
-    from repro.core.batched_explorer import explore_batch
+    Use `DesignSession().run(DesignRequest(array_size, layout=False))`
+    instead; repeated shim calls share the process-wide default session's
+    program and front caches."""
+    from repro.api import DesignRequest, default_session
 
-    out = explore_batch((array_size,), (seed,), pop_size=pop_size,
+    _deprecated("explore", "repro.api.DesignSession.run")
+    req = DesignRequest(array_size=array_size, seed=seed, pop_size=pop_size,
                         generations=generations, cal=cal,
                         use_pallas_dominance=use_pallas_dominance,
-                        use_pallas_rank=use_pallas_rank)
-    return out[(array_size, seed)]
+                        use_pallas_rank=use_pallas_rank, layout=False)
+    return default_session().run(req).pareto
 
 
 def explore_sizes(sizes=(4096, 16384, 65536), *, seed: int = 0,
                   **kw) -> dict[int, ParetoResult]:
-    """Fig. 9(a)(b)-style sweep over array sizes — one compiled program
-    covers the whole sweep (see `repro.core.batched_explorer`)."""
-    from repro.core.batched_explorer import explore_batch
+    """Deprecated shim over `repro.api`: Fig. 9(a)(b)-style sweep over
+    array sizes, coalesced by a `DesignService` into one compiled
+    program / one dispatch for the whole sweep."""
+    from repro.api import DesignRequest, default_session
+    from repro.serve.design_service import DesignService
 
-    out = explore_batch(tuple(sizes), (seed,), **kw)
-    return {s: out[(int(s), seed)] for s in sizes}
+    _deprecated("explore_sizes", "repro.serve.design_service.DesignService")
+    sizes = tuple(sizes)
+    svc = DesignService(session=default_session(),
+                        max_coalesce=max(len(sizes), 1))
+    tickets = {int(s): svc.submit(DesignRequest(
+        array_size=int(s), seed=seed, layout=False, **kw)) for s in sizes}
+    arts = svc.run()
+    return {s: arts[tickets[int(s)]].pareto for s in sizes}
 
 
 def distill_and_layout(array_size: int, *, pop_size: int = 256,
@@ -132,29 +184,23 @@ def distill_and_layout(array_size: int, *, pop_size: int = 256,
                        cal: CalibConstants = CAL28, coarse: int = 64,
                        capacity: int = 4, use_pallas_dominance: bool = False,
                        use_pallas_rank: bool = False, **filter_kw):
-    """Paper Fig. 4 end to end: MOGA sweep -> agile distillation ->
-    batched layout generation.
+    """Deprecated shim over `repro.api`: MOGA sweep -> agile distillation
+    -> batched layout generation (paper Fig. 4 end to end).
 
-    `filter_kw` are `ParetoResult.filter` thresholds (the user's
-    application requirements); the surviving Pareto set is laid out in
-    one batched dispatch chain (`repro.eda.batched_flow
-    .generate_layouts`) instead of one `generate_layout` call per spec.
-    Returns `(distilled: ParetoResult, layouts: BatchedLayoutResult)`
-    with `layouts.metrics_rows()` aligned to `distilled.specs`.
-    """
-    from repro.eda.batched_flow import generate_layouts
+    `filter_kw` are `ParetoResult.filter` thresholds (the
+    `repro.api.Requirements` fields).  Returns `(distilled, layouts)`
+    exactly like `DesignSession.run(...)`'s artifact carries them."""
+    from repro.api import DesignRequest, Requirements, default_session
 
-    res = explore(array_size, pop_size=pop_size, generations=generations,
-                  seed=seed, cal=cal,
-                  use_pallas_dominance=use_pallas_dominance,
-                  use_pallas_rank=use_pallas_rank)
-    distilled = res.filter(**filter_kw) if filter_kw else res
-    if not len(distilled):
-        raise ValueError(
-            f"agile filter {filter_kw!r} removed every Pareto point for "
-            f"array_size={array_size}; relax the requirements")
-    return distilled, generate_layouts(distilled.specs, coarse=coarse,
-                                       capacity=capacity)
+    _deprecated("distill_and_layout", "repro.api.DesignSession.run")
+    req = DesignRequest(array_size=array_size, seed=seed, pop_size=pop_size,
+                        generations=generations, cal=cal,
+                        use_pallas_dominance=use_pallas_dominance,
+                        use_pallas_rank=use_pallas_rank,
+                        requirements=Requirements(**filter_kw),
+                        coarse=coarse, capacity=capacity, layout=True)
+    artifact = default_session().run(req)
+    return artifact.pareto, artifact.layouts
 
 
 def full_design_space(array_size: int, cal: CalibConstants = CAL28):

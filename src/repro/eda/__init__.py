@@ -15,4 +15,8 @@ from the MOGA explorer's Pareto set — flows through:
 The sequential and batched paths share the same vectorized placement and
 the same wavefront/backtrace semantics, so per-spec results agree
 exactly (tests/test_batched_flow.py).
+
+The supported front door is `repro.api` (`DesignSession` /
+`DesignService`): it chains exploration into `batched_flow` and buckets
+multi-tenant spec batches by routing-grid shape before dispatch.
 """

@@ -27,8 +27,10 @@ stage is array-programmed over a stacked spec batch:
   * **metrics / netlist stats** — closed-form (`netlist.stats_for_spec`)
     and vectorized over the batch.
 
-`generate_layouts(specs)` is the entry point; `core.explorer
-.distill_and_layout` chains `explore_batch` into it.  Per-spec results
+`generate_layouts(specs)` is the engine entry point; the supported
+front-end is `repro.api.DesignSession` (which chains exploration into
+it and buckets multi-tenant batches by routing-grid shape before
+calling it — see `repro.serve.design_service`).  Per-spec results
 unpack to the sequential dataclasses via `BatchedLayoutResult
 .placements()` / `.drc_reports()` for interop, and
 `tests/test_batched_flow.py` asserts batched == sequential per spec
@@ -38,7 +40,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import NamedTuple
 
 import jax
@@ -395,11 +396,14 @@ class BatchedLayoutResult:
     """Layouts for a whole spec batch, in padded tensor form.
 
     Mirrors `flow.LayoutResult` per spec (`metrics_rows` carries the same
-    keys; `placements()` / `drc_reports()` unpack to the sequential
-    dataclasses).  Wire point lists are not materialized — the routing
-    stats and the congestion map (`routing.occ_count`) are; use the
-    sequential `flow.generate_layout` when full wire geometry is needed
-    (e.g. for GDS-like JSON export of a single chosen design point).
+    keys minus the wall-clock; `placements()` / `drc_reports()` unpack to
+    the sequential dataclasses).  Wire point lists are not materialized —
+    the routing stats and the congestion map (`routing.occ_count`) are;
+    use the sequential `flow.generate_layout` when full wire geometry is
+    needed (e.g. for GDS-like JSON export of a single chosen design
+    point).  Timing is a caller concern: `repro.api.DesignSession`
+    reports it in the artifact provenance, benchmarks time around the
+    call — the library path itself stays clock-free.
     """
 
     specs: tuple[MacroSpec, ...]
@@ -411,7 +415,6 @@ class BatchedLayoutResult:
     drc_overlaps: np.ndarray
     drc_oob: np.ndarray
     netlist_stats: list[dict]
-    elapsed_s: float
 
     def __len__(self) -> int:
         return len(self.specs)
@@ -452,8 +455,9 @@ class BatchedLayoutResult:
         return out
 
     def metrics_rows(self) -> list[dict]:
-        """Per-spec metrics with the same keys as `LayoutResult.metrics`
-        (elapsed_s is the batch wall-clock amortized over specs)."""
+        """Per-spec metrics: the pure-content keys of
+        `LayoutResult.metrics` (no `elapsed_s` — rows are identical for
+        a spec regardless of what batch it rode in)."""
         h = np.array([s.h for s in self.specs], np.float32)
         l = np.array([s.l for s in self.specs], np.float32)
         b = np.array([s.b_adc for s in self.specs], np.float32)
@@ -473,7 +477,6 @@ class BatchedLayoutResult:
                 "route_success": float(succ[i]),
                 "wirelength": int(self.routing.wirelength[i]),
                 "drc_clean": bool(self.drc_clean[i]),
-                "elapsed_s": self.elapsed_s / max(len(self.specs), 1),
             })
         return rows
 
@@ -482,8 +485,7 @@ class BatchedLayoutResult:
 
         with open(path, "w") as f:
             json.dump({"specs": [s.as_tuple() for s in self.specs],
-                       "points": self.metrics_rows(),
-                       "elapsed_s": self.elapsed_s}, f, indent=1)
+                       "points": self.metrics_rows()}, f, indent=1)
 
 
 def generate_layouts(specs, *, coarse: int = 64, capacity: int = 4,
@@ -497,7 +499,6 @@ def generate_layouts(specs, *, coarse: int = 64, capacity: int = 4,
     specs = tuple(specs)
     if not specs:
         raise ValueError("generate_layouts needs at least one MacroSpec")
-    t0 = time.time()
     geom = geometry()
     dims = BatchDims.for_specs(specs)
     ops = stack_layout_operands(specs, geom)
@@ -511,5 +512,4 @@ def generate_layouts(specs, *, coarse: int = 64, capacity: int = 4,
     return BatchedLayoutResult(
         specs=specs, dims=dims, geom=geom, ops=ops, tensors=tensors,
         routing=routing, drc_overlaps=np.asarray(overlaps),
-        drc_oob=np.asarray(oob), netlist_stats=stats,
-        elapsed_s=time.time() - t0)
+        drc_oob=np.asarray(oob), netlist_stats=stats)

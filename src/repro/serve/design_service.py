@@ -1,0 +1,92 @@
+"""Multi-tenant design service: queue-backed, coalescing front door.
+
+The design-flow counterpart of `repro.serve.engine.ServeEngine`'s slot
+model: concurrent users `submit()` `DesignRequest`s and collect
+ticketed `DesignArtifact`s, while the service amortizes the heavy work
+across tenants.  Each `step()` drains up to `max_coalesce` queued
+requests and hands them to `DesignSession.run_many`, which
+
+  * coalesces every request in the same explore group (equal MOGA
+    budget / calibration / backend knobs) into ONE `explore_cells`
+    dispatch — concurrent tenants share the compiled sweep program and
+    a single padded population stack instead of dispatching per user;
+  * buckets the union of surviving specs by routing-grid shape before
+    `generate_layouts`, so a mixed tenant population (tall-narrow next
+    to wide-shallow macros) does not pay padded-batch waste for the
+    biggest member (the ROADMAP "bucketing" item);
+  * demuxes per-request artifacts whose content is equal to what the
+    sequential legacy path (`explore` -> `filter` -> a whole-batch
+    `generate_layouts`) produces for each request alone — asserted in
+    `tests/test_design_api.py`.
+
+Dispatch accounting lives in `service.stats` (a view of the session's
+counter): `explorer_dispatches`, `layout_dispatches`,
+`run_cell_traces`, cache hit/miss counts.
+"""
+from __future__ import annotations
+
+import collections
+
+from repro.api.request import DesignRequest
+from repro.api.session import DesignArtifact, DesignSession
+
+
+class DesignService:
+    """Queue-backed multi-tenant layer over a `DesignSession`."""
+
+    def __init__(self, session: DesignSession | None = None, *,
+                 max_coalesce: int = 16):
+        if max_coalesce <= 0:
+            raise ValueError("max_coalesce must be positive")
+        self.session = session or DesignSession()
+        self.max_coalesce = max_coalesce
+        self._queue: list[tuple[int, DesignRequest]] = []
+        self._next_ticket = 0
+        self.done: dict[int, DesignArtifact] = {}
+
+    @property
+    def stats(self) -> collections.Counter:
+        return self.session.stats
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def submit(self, request: DesignRequest) -> int:
+        """Enqueue a request; returns the ticket to collect its artifact."""
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, request))
+        return ticket
+
+    def step(self) -> dict[int, DesignArtifact]:
+        """Drain one coalesced batch (up to `max_coalesce` requests) and
+        return its per-ticket artifacts.
+
+        A request whose requirements remove every Pareto point cannot
+        poison the batch: it completes with `artifact.error` set (the
+        session's non-strict mode) while the other tenants are served.
+        On an unexpected exception the batch is restored to the queue
+        so no tenant's submission is lost."""
+        batch, self._queue = (self._queue[:self.max_coalesce],
+                              self._queue[self.max_coalesce:])
+        if not batch:
+            return {}
+        try:
+            artifacts = self.session.run_many([r for _, r in batch],
+                                              bucket_layouts=True,
+                                              strict=False)
+        except Exception:
+            self._queue = batch + self._queue
+            raise
+        out = {ticket: artifacts[r] for ticket, r in batch}
+        self.done.update(out)
+        return out
+
+    def run(self) -> dict[int, DesignArtifact]:
+        """Drain the whole queue; returns every completed ticket."""
+        while self._queue:
+            self.step()
+        return self.done
+
+    def collect(self, ticket: int) -> DesignArtifact:
+        return self.done[ticket]
