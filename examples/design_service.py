@@ -1,15 +1,22 @@
 """Multi-tenant design service demo: concurrent users, one dispatch.
 
 Several tenants submit different `DesignRequest`s — different array
-sizes, seeds, and application requirements — and the `DesignService`
-coalesces them: one compiled MOGA sweep program runs every tenant's
-cell in a single device dispatch, and the union of surviving specs is
-laid out in routing-grid-shape buckets before being demuxed back into
-per-ticket artifacts.
+sizes, seeds, and application requirements — against a *running*
+`DesignService` pump (`serve()`): submissions landing inside the
+coalescing window are folded into one compiled MOGA sweep dispatch, the
+union of surviving specs is laid out in routing-grid-shape buckets, and
+each tenant blocks in `collect(timeout=...)` until its ticketed
+artifact lands.
 
-  PYTHONPATH=src python examples/design_service.py
+A persistent artifact cache backs the session, so re-running this
+script (same `--cache-dir`) serves every tenant from disk with zero
+explorer dispatches — the provenance line flips to `artifact_cache`.
+
+  PYTHONPATH=src python examples/design_service.py [--cache-dir DIR]
 """
-from repro.api import DesignRequest, Requirements
+import argparse
+
+from repro.api import DesignRequest, DesignSession, Requirements
 from repro.serve.design_service import DesignService
 
 TENANTS = {
@@ -27,28 +34,41 @@ TENANTS = {
 
 
 def main() -> None:
-    svc = DesignService()
-    tickets = {name: svc.submit(req) for name, req in TENANTS.items()}
-    done = svc.run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent artifact-cache directory; re-run with "
+                         "the same dir to be served from disk")
+    args = ap.parse_args()
 
-    for name, ticket in tickets.items():
-        art = done[ticket]
+    session = DesignSession(artifact_cache=args.cache_dir)
+    with DesignService(session, coalesce_window_s=0.25).serve() as svc:
+        tickets = {name: svc.submit(req) for name, req in TENANTS.items()}
+        arts = {name: svc.collect(t, timeout=600)
+                for name, t in tickets.items()}
+
+    for name, art in arts.items():
         p = art.provenance
         if not art.ok or not len(art.pareto):
-            print(f"{name:10s} ticket={ticket} | no surviving solution "
-                  f"({art.error or 'requirements removed every point'})")
+            why = art.error or "requirements removed every point"
+            print(f"{name:10s} ticket={tickets[name]} | no surviving "
+                  f"solution ({why})")
             continue
         best = art.pareto.best("tops_per_w")
         laid = ("front only" if art.layout_rows is None
                 else f"{p.layout_dispatches} layout bucket(s)")
-        print(f"{name:10s} ticket={ticket} | {len(art.pareto)} survivors, "
-              f"best H={best.h} W={best.w} L={best.l} B={best.b_adc} | "
-              f"coalesced with {p.coalesced - 1} other request(s), {laid}")
+        print(f"{name:10s} ticket={tickets[name]} | {len(art.pareto)} "
+              f"survivors, best H={best.h} W={best.w} L={best.l} "
+              f"B={best.b_adc} | served from {p.served_from}, coalesced "
+              f"with {p.coalesced - 1} other request(s), {laid}")
     s = svc.stats
+    factor = (s["service_batch_requests"] / s["service_batches"]
+              if s["service_batches"] else 0.0)
     print(f"\nservice: {s['requests_served']} requests -> "
-          f"{s['explorer_dispatches']} explorer dispatch(es), "
-          f"{s['run_cell_traces']} sweep-program trace(s), "
-          f"{s['layout_dispatches']} layout bucket dispatch(es)")
+          f"{s['service_batches']} batch(es) (coalescing factor "
+          f"{factor:.1f}), {s['explorer_dispatches']} explorer "
+          f"dispatch(es), {s['run_cell_traces']} sweep-program trace(s), "
+          f"{s['layout_dispatches']} layout bucket dispatch(es), "
+          f"{s['artifact_cache_hits']} artifact-cache hit(s)")
 
 
 if __name__ == "__main__":

@@ -11,14 +11,19 @@ One declarative request type, one long-lived session, one service:
 
 `DesignRequest` captures the whole query (MOGA budget, calibration,
 backend knobs, application requirements, layout options);
-`DesignSession` owns the compiled-program and Pareto-front caches;
+`DesignSession` owns the compiled-program and Pareto-front caches and
+optionally a persistent, cross-process `ArtifactCache`
+(`DesignSession(artifact_cache="/path")`);
 `repro.serve.design_service.DesignService` adds the queue-backed
-multi-tenant layer (request coalescing, grid-shape layout bucketing).
+multi-tenant layer (request coalescing, grid-shape layout bucketing,
+and the thread-pumped `serve()` loop with latency-bounded coalescing
+windows).
 The legacy entry points (`repro.core.explorer.explore` and friends)
 survive as thin deprecation shims over this package.
 """
 from repro.api.request import DesignRequest, Requirements
 from repro.api.session import DesignArtifact, DesignSession, Provenance
+from repro.api.artifact_cache import ArtifactCache
 
 _DEFAULT_SESSION: DesignSession | None = None
 
@@ -32,4 +37,5 @@ def default_session() -> DesignSession:
 
 
 __all__ = ["DesignRequest", "Requirements", "DesignArtifact",
-           "DesignSession", "Provenance", "default_session"]
+           "DesignSession", "Provenance", "ArtifactCache",
+           "default_session"]

@@ -1,0 +1,107 @@
+"""Persistent, cross-process artifact cache keyed by `DesignRequest.sha()`.
+
+The in-memory caches of `repro.api.session.DesignSession` (compiled
+programs, Pareto fronts) die with the process; this is the third tier
+that does not: a directory of artifact JSON files that any number of
+sessions — in any number of processes, on a shared filesystem — read
+before exploring and write after each run.  A warm second process
+serves a repeat request with **zero** explorer dispatches
+(`tests/test_design_service_async.py` asserts this through a real
+subprocess).
+
+Layout (documented in `docs/benchmarks.md`):
+
+    <root>/<request.sha()>.json     one complete DesignArtifact dump
+
+Each entry is exactly `DesignArtifact.to_dict()` — it carries a
+top-level `"schema"` stamp (`repro.api.session.ARTIFACT_SCHEMA`) and
+the full request dict, so `get()` can reject entries written by a
+different schema generation and guard the truncated-sha key against
+collisions by comparing the embedded request with the queried one.
+
+Concurrency: writes go through `DesignArtifact.to_json`'s temp-file +
+`os.replace` path, so readers only ever observe complete files — two
+processes racing to fill the same key both succeed, last writer wins
+with identical content.  A corrupt / half-migrated / foreign file is a
+counted miss (`cache.stats["rejects"]`, alongside `"hits"`/
+`"misses"`/`"writes"` — the session mirrors hits/misses/writes into
+its own `stats` as `artifact_cache_*`), never an exception: the caller
+just recomputes and overwrites it.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import pathlib
+
+from repro.api.request import DesignRequest
+from repro.api.session import ARTIFACT_SCHEMA, DesignArtifact
+
+
+class ArtifactCache:
+    """Disk store of `DesignArtifact`s, keyed by `DesignRequest.sha()`."""
+
+    def __init__(self, root) -> None:
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.stats: collections.Counter = collections.Counter()
+
+    def path_for(self, request: DesignRequest) -> pathlib.Path:
+        return self.root / f"{request.sha()}.json"
+
+    def get(self, request: DesignRequest) -> DesignArtifact | None:
+        """The cached artifact for `request`, or `None` on any kind of
+        miss (absent, unreadable, schema skew, sha collision)."""
+        path = self.path_for(request)
+        try:
+            with open(path) as f:
+                d = json.load(f)
+        except FileNotFoundError:
+            self.stats["misses"] += 1
+            return None
+        except (OSError, json.JSONDecodeError):
+            self.stats["misses"] += 1
+            self.stats["rejects"] += 1
+            return None
+        if (not isinstance(d, dict)
+                or d.get("schema") != ARTIFACT_SCHEMA
+                or d.get("request") != request.to_dict()):
+            self.stats["misses"] += 1
+            self.stats["rejects"] += 1
+            return None
+        try:
+            artifact = DesignArtifact.from_dict(d)
+        except (KeyError, TypeError, ValueError):
+            self.stats["misses"] += 1
+            self.stats["rejects"] += 1
+            return None
+        self.stats["hits"] += 1
+        return artifact
+
+    def put(self, artifact: DesignArtifact) -> pathlib.Path:
+        """Store (atomically); returns the entry path."""
+        path = self.path_for(artifact.request)
+        artifact.to_json(path)
+        self.stats["writes"] += 1
+        return path
+
+    def __contains__(self, request: DesignRequest) -> bool:
+        return self.path_for(request).exists()
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.root.glob("*.json"))
+
+    def clear(self) -> int:
+        """Drop every entry; returns how many were removed."""
+        n = 0
+        for path in self.root.glob("*.json"):
+            try:
+                os.unlink(path)
+                n += 1
+            except OSError:
+                pass
+        return n
+
+    def __repr__(self) -> str:
+        return f"ArtifactCache(root={str(self.root)!r}, entries={len(self)})"

@@ -113,6 +113,12 @@ class DesignRequest:
     @classmethod
     def from_dict(cls, d: dict) -> "DesignRequest":
         d = dict(d)
+        # a clear diagnosis beats dataclass __init__'s TypeError when an
+        # artifact-cache entry was written by a newer request schema
+        unknown = sorted(set(d) - {f.name for f in dataclasses.fields(cls)})
+        if unknown:
+            raise ValueError(f"unknown DesignRequest field(s) {unknown} — "
+                             f"written by a newer schema?")
         d["cal"] = CalibConstants(**d["cal"])
         d["requirements"] = Requirements(**_definite_dict(d["requirements"]))
         return cls(**d)

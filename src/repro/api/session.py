@@ -13,7 +13,13 @@ end to end.  It owns two caches:
   * a *front cache* keyed by `DesignRequest.explore_key()` — the
     distillation-independent Pareto front, so a repeat query (or the
     same exploration under different application requirements) costs no
-    device dispatch at all.
+    device dispatch at all;
+  * optionally a third, *persistent* tier: an
+    `repro.api.artifact_cache.ArtifactCache` (disk store keyed by
+    `DesignRequest.sha()`), consulted before exploring and written
+    after each run, so a fleet of processes shares exploration results
+    across restarts — served artifacts carry
+    `provenance.served_from == "artifact_cache"`.
 
 `run()` executes one request; `run_many()` executes a batch and is the
 coalescing engine `repro.serve.design_service.DesignService` drives:
@@ -34,6 +40,9 @@ import collections
 import dataclasses
 import functools
 import json
+import os
+import tempfile
+import threading
 import time
 from typing import Iterable
 
@@ -43,6 +52,12 @@ from repro.core.explorer import ParetoResult
 from repro.api.request import DesignRequest
 from repro.core.acim_spec import MacroSpec
 from repro.eda.batched_flow import BatchedLayoutResult, generate_layouts
+
+
+# Stamped into every serialized artifact; `repro.api.artifact_cache`
+# refuses entries whose stamp differs, so a fleet upgrade cannot feed a
+# new reader stale-layout JSON.  Bump on any to_dict/from_dict change.
+ARTIFACT_SCHEMA = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +82,10 @@ class Provenance:
     layout_dispatches: int      # grid-shape buckets this request touched
     front_cache_hit: bool
     coalesced: int              # requests sharing the exploration (>= 1)
+    # which tier produced the artifact's content: "explorer" (a device
+    # dispatch), "front_cache" (this process's in-memory front cache), or
+    # "artifact_cache" (the persistent cross-process store)
+    served_from: str = "explorer"
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -103,21 +122,27 @@ class DesignArtifact:
                 "layout": (None if self.layout_rows is None
                            else list(self.layout_rows))}
 
+    def to_dict(self) -> dict:
+        return {"schema": ARTIFACT_SCHEMA,
+                "request": self.request.to_dict(),
+                "pareto": {"array_size": self.pareto.array_size,
+                           "points": self.pareto.to_rows()},
+                "layout_rows": (None if self.layout_rows is None
+                                else list(self.layout_rows)),
+                "provenance": dataclasses.asdict(self.provenance),
+                "error": self.error}
+
     def to_json(self, path) -> None:
-        with open(path, "w") as f:
-            json.dump({"request": self.request.to_dict(),
-                       "pareto": {"array_size": self.pareto.array_size,
-                                  "points": self.pareto.to_rows()},
-                       "layout_rows": (None if self.layout_rows is None
-                                       else list(self.layout_rows)),
-                       "provenance": dataclasses.asdict(self.provenance),
-                       "error": self.error},
-                      f, indent=1)
+        """Atomic dump: a crash mid-write can never leave a truncated file
+        at `path` (the persistent artifact cache depends on this)."""
+        _atomic_dump(self.to_dict(), path)
 
     @classmethod
-    def from_json(cls, path) -> "DesignArtifact":
-        with open(path) as f:
-            d = json.load(f)
+    def from_dict(cls, d: dict) -> "DesignArtifact":
+        schema = d.get("schema", ARTIFACT_SCHEMA)   # pre-stamp files pass
+        if schema != ARTIFACT_SCHEMA:
+            raise ValueError(f"artifact schema {schema} != supported "
+                             f"{ARTIFACT_SCHEMA}; re-run the request")
         rows = d["layout_rows"]
         return cls(request=DesignRequest.from_dict(d["request"]),
                    pareto=ParetoResult.from_rows(d["pareto"]["array_size"],
@@ -126,24 +151,80 @@ class DesignArtifact:
                    provenance=Provenance(**d["provenance"]),
                    error=d.get("error"))
 
+    @classmethod
+    def from_json(cls, path) -> "DesignArtifact":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
 
-@functools.lru_cache(maxsize=None)
-def _grid_sig(spec: MacroSpec, coarse: int) -> tuple[int, int]:
-    """Routing-grid shape of a spec's macro, without placing it."""
+
+def _atomic_dump(payload: dict, path) -> None:
+    """Temp-file + `os.replace` JSON write: readers only ever see either
+    the previous complete file or the new complete file.  The temp file
+    lives in the target's directory so the replace stays on one
+    filesystem (rename atomicity)."""
+    path = os.fspath(path)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+# Bounded: a long-lived service sees an unbounded stream of distinct
+# (spec, coarse) pairs, and an unbounded memo keyed by MacroSpec grows
+# with it forever.  4096 entries cover hundreds of concurrent Pareto
+# sets.  Hand-rolled (not lru_cache) so a hit/miss can be attributed to
+# the *calling* session's stats Counter exactly — several sessions in
+# one process share the memo without cross-counting each other.
+GRID_SIG_CACHE_SIZE = 4096
+_GRID_SIG_LOCK = threading.Lock()
+_GRID_SIG_MEMO: collections.OrderedDict = collections.OrderedDict()
+
+
+def _grid_sig(spec: MacroSpec, coarse: int,
+              stats: collections.Counter | None = None) -> tuple[int, int]:
+    """Routing-grid shape of a spec's macro, without placing it.
+    Memoized process-wide with an LRU bound; pass a session's `stats`
+    to count the lookup as that session's "grid_sig_hits"/"_misses"."""
+    key = (spec, coarse)
+    with _GRID_SIG_LOCK:
+        val = _GRID_SIG_MEMO.get(key)
+        if val is not None:
+            _GRID_SIG_MEMO.move_to_end(key)
+            if stats is not None:
+                stats["grid_sig_hits"] += 1
+            return val
     from repro.eda.placer import geometry, layout_operands
     from repro.eda.router import grid_shape
 
     ops = layout_operands(spec, geometry())
-    return grid_shape(int(ops.width), int(ops.height), coarse)
+    val = grid_shape(int(ops.width), int(ops.height), coarse)
+    with _GRID_SIG_LOCK:
+        if stats is not None:
+            stats["grid_sig_misses"] += 1
+        _GRID_SIG_MEMO[key] = val
+        _GRID_SIG_MEMO.move_to_end(key)
+        while len(_GRID_SIG_MEMO) > GRID_SIG_CACHE_SIZE:
+            _GRID_SIG_MEMO.popitem(last=False)
+    return val
 
 
-def _bucket_key(spec: MacroSpec, coarse: int, capacity: int) -> tuple:
+def _bucket_key(spec: MacroSpec, coarse: int, capacity: int,
+                stats: collections.Counter | None = None) -> tuple:
     """Layout-bucket key: the routing-grid shape quantized to the next
     power of two per axis.  Exact-shape buckets would degenerate to one
     dispatch (and one compile) per distinct spec on heterogeneous
     fronts; quantizing bounds the padded-cell waste at <2x per axis
     while keeping the bucket count logarithmic in the shape spread."""
-    gh, gw = _grid_sig(spec, coarse)
+    gh, gw = _grid_sig(spec, coarse, stats)
     return (coarse, capacity,
             1 << (gh - 1).bit_length(), 1 << (gw - 1).bit_length())
 
@@ -165,12 +246,24 @@ class _SweepProgram:
 
 
 class DesignSession:
-    """Long-lived request executor owning the program and front caches."""
+    """Long-lived request executor owning the program and front caches,
+    optionally backed by a persistent cross-process artifact cache."""
 
-    def __init__(self):
+    def __init__(self, *, artifact_cache=None):
+        """`artifact_cache` is an `repro.api.artifact_cache.ArtifactCache`
+        (or anything with its `get(request)`/`put(artifact)` shape), a
+        directory path to open one at, or `None` for in-memory caches
+        only.  With a cache, `run`/`run_many` consult it *before*
+        exploring — a warm repeat request is served with zero explorer
+        dispatches and `provenance.served_from == "artifact_cache"` —
+        and write every successful artifact back after the run."""
         self._programs: dict[tuple, _SweepProgram] = {}
         self._fronts: dict[tuple, ParetoResult] = {}
         self.stats: collections.Counter = collections.Counter()
+        if artifact_cache is not None and not hasattr(artifact_cache, "put"):
+            from repro.api.artifact_cache import ArtifactCache
+            artifact_cache = ArtifactCache(artifact_cache)
+        self.artifact_cache = artifact_cache
 
     # -- program cache ---------------------------------------------------
     def program_for(self, request: DesignRequest) -> _SweepProgram:
@@ -245,7 +338,7 @@ class DesignSession:
             if not r.layout:
                 continue
             for spec in distilled[r].specs:
-                key = _bucket_key(spec, r.coarse, r.capacity)
+                key = _bucket_key(spec, r.coarse, r.capacity, self.stats)
                 buckets.setdefault(key, {})[spec] = None
         rows: dict[tuple, dict] = {}
         spec_share: dict[tuple, float] = {}
@@ -269,8 +362,33 @@ class DesignSession:
         A request whose requirements remove every Pareto point raises
         `ValueError` under `strict=True`; under `strict=False` (the
         multi-tenant path) it gets an artifact with `error` set and the
-        rest of the batch is served normally."""
-        requests = list(dict.fromkeys(requests))
+        rest of the batch is served normally.
+
+        With a persistent `artifact_cache`, requests found there are
+        served directly (zero explorer/layout dispatches, provenance
+        re-stamped `served_from="artifact_cache"`); the remainder runs
+        the normal coalesced pipeline and is written back."""
+        all_requests = list(dict.fromkeys(requests))
+        out: dict[DesignRequest, DesignArtifact] = {}
+        if self.artifact_cache is not None:
+            for r in all_requests:
+                t0 = time.perf_counter()
+                hit = self.artifact_cache.get(r)
+                if hit is None:
+                    self.stats["artifact_cache_misses"] += 1
+                    continue
+                self.stats["artifact_cache_hits"] += 1
+                prov = dataclasses.replace(
+                    hit.provenance, explore_s=0.0, layout_s=0.0,
+                    total_s=time.perf_counter() - t0, new_traces=0,
+                    explorer_dispatches=0, layout_dispatches=0,
+                    front_cache_hit=False, coalesced=1,
+                    served_from="artifact_cache")
+                out[r] = dataclasses.replace(hit, provenance=prov)
+        requests = [r for r in all_requests if r not in out]
+        if not requests:
+            self.stats["requests_served"] += len(out)
+            return out
         fronts, info = self._fronts_for(requests)
         distilled: dict[DesignRequest, ParetoResult] = {}
         errors: dict[DesignRequest, str] = {}
@@ -297,6 +415,8 @@ class DesignSession:
         if bucket_layouts:
             rows, spec_share = self._bucketed_rows(laid, distilled)
             for r in laid:
+                # recompute without stats: _bucketed_rows already counted
+                # this exact (request, spec) lookup once
                 keys = [_bucket_key(s, r.coarse, r.capacity)
                         for s in distilled[r].specs]
                 rows_for[r] = tuple(rows[(r.coarse, r.capacity, s)]
@@ -313,7 +433,6 @@ class DesignSession:
                 rows_for[r] = tuple(res.metrics_rows())
                 buckets_for[r] = 1
 
-        out = {}
         for r in requests:
             i = info[r]
             prov = Provenance(
@@ -323,15 +442,23 @@ class DesignSession:
                 new_traces=i["new_traces"],
                 explorer_dispatches=i["dispatches"],
                 layout_dispatches=buckets_for[r],
-                front_cache_hit=i["cache_hit"], coalesced=i["coalesced"])
-            out[r] = DesignArtifact(request=r, pareto=distilled[r],
-                                    layout_rows=rows_for[r],
-                                    provenance=prov, layouts=results[r],
-                                    error=errors.get(r))
+                front_cache_hit=i["cache_hit"], coalesced=i["coalesced"],
+                served_from=("front_cache" if i["cache_hit"]
+                             else "explorer"))
+            art = DesignArtifact(request=r, pareto=distilled[r],
+                                 layout_rows=rows_for[r],
+                                 provenance=prov, layouts=results[r],
+                                 error=errors.get(r))
+            if self.artifact_cache is not None and art.ok:
+                self.artifact_cache.put(art)
+                self.stats["artifact_cache_writes"] += 1
+            out[r] = art
         self.stats["requests_served"] += len(out)
         return out
 
     def run(self, request: DesignRequest) -> DesignArtifact:
         """Execute one request end to end (single-batch layout, so the
-        artifact carries the full `BatchedLayoutResult`)."""
+        artifact carries the full `BatchedLayoutResult` — unless it was
+        served from the persistent artifact cache, which stores only the
+        serializable `layout_rows`; check `provenance.served_from`)."""
         return self.run_many([request], bucket_layouts=False)[request]

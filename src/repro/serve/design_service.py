@@ -1,92 +1,345 @@
-"""Multi-tenant design service: queue-backed, coalescing front door.
+"""Multi-tenant design service: deadline-coalescing, thread-pumped front door.
 
 The design-flow counterpart of `repro.serve.engine.ServeEngine`'s slot
 model: concurrent users `submit()` `DesignRequest`s and collect
 ticketed `DesignArtifact`s, while the service amortizes the heavy work
-across tenants.  Each `step()` drains up to `max_coalesce` queued
-requests and hands them to `DesignSession.run_many`, which
+across tenants.  Two driving modes share one queue:
+
+  * **synchronous drain** — `step()` takes one coalesced batch (up to
+    `max_coalesce` requests), `run()` drains everything.  This is the
+    PR-3 shape and stays the right tool for scripted batch jobs
+    (`explore_sizes`, the benchmarks' cold/warm sweeps).
+  * **async serve loop** — `serve()` starts a pump thread with
+    latency-bounded coalescing windows, in the style of `ServeEngine`'s
+    slot refill: a batch dispatches when either `max_coalesce` requests
+    have queued or `coalesce_window_s` has elapsed since the *oldest*
+    queued request (admit-until-deadline).  `submit()`/`poll()`/
+    `collect(timeout=...)` are thread-safe; `close()` (or leaving the
+    `with` block) drains the queue gracefully and joins the pump.
+
+Each dispatched batch goes to `DesignSession.run_many`, which
 
   * coalesces every request in the same explore group (equal MOGA
     budget / calibration / backend knobs) into ONE `explore_cells`
     dispatch — concurrent tenants share the compiled sweep program and
     a single padded population stack instead of dispatching per user;
   * buckets the union of surviving specs by routing-grid shape before
-    `generate_layouts`, so a mixed tenant population (tall-narrow next
-    to wide-shallow macros) does not pay padded-batch waste for the
-    biggest member (the ROADMAP "bucketing" item);
+    `generate_layouts`, so a mixed tenant population does not pay
+    padded-batch waste for the biggest member;
+  * consults / fills the session's persistent artifact cache when one
+    is configured (`repro.api.artifact_cache.ArtifactCache`), so a
+    fleet of service processes shares exploration results;
   * demuxes per-request artifacts whose content is equal to what the
-    sequential legacy path (`explore` -> `filter` -> a whole-batch
-    `generate_layouts`) produces for each request alone — asserted in
-    `tests/test_design_api.py`.
+    sequential legacy path produces for each request alone — asserted
+    in `tests/test_design_api.py` and `tests/test_design_service_async.py`.
+
+Failure semantics: a request whose requirements remove every Pareto
+point completes with `artifact.error` set (non-strict mode) and cannot
+poison its batch.  An *unexpected* exception inside a dispatch restores
+the whole batch to the FRONT of the queue — no ticket is lost or
+reordered — and, on the pump path, is re-raised from `close()` (and
+surfaced to blocked `collect()` callers).
 
 Dispatch accounting lives in `service.stats` (a view of the session's
 counter): `explorer_dispatches`, `layout_dispatches`,
-`run_cell_traces`, cache hit/miss counts.
+`run_cell_traces`, cache hit/miss counts, plus the service-level
+`service_batches` / `service_batch_requests` pair whose ratio is the
+realized coalescing factor.
 """
 from __future__ import annotations
 
 import collections
+import threading
+import time
 
 from repro.api.request import DesignRequest
 from repro.api.session import DesignArtifact, DesignSession
+
+
+class UnknownTicket(KeyError):
+    """Raised for a ticket this service never issued, or whose artifact
+    was already collected (and popped — pass `keep_done=True` to keep)."""
+
+    def __str__(self) -> str:  # KeyError repr-quotes its message otherwise
+        return self.args[0] if self.args else ""
+
+
+class PendingTicket(RuntimeError):
+    """Raised when a ticket's artifact is not ready: the request is still
+    queued or in flight.  Distinct from `UnknownTicket` so callers can
+    tell "wait longer / drain the queue" from "you never submitted this"."""
 
 
 class DesignService:
     """Queue-backed multi-tenant layer over a `DesignSession`."""
 
     def __init__(self, session: DesignSession | None = None, *,
-                 max_coalesce: int = 16):
+                 max_coalesce: int = 16, coalesce_window_s: float = 0.05):
         if max_coalesce <= 0:
             raise ValueError("max_coalesce must be positive")
+        if coalesce_window_s < 0:
+            raise ValueError("coalesce_window_s must be >= 0")
         self.session = session or DesignSession()
         self.max_coalesce = max_coalesce
-        self._queue: list[tuple[int, DesignRequest]] = []
+        self.coalesce_window_s = coalesce_window_s
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)   # queue grew / closing
+        self._done_cv = threading.Condition(self._lock)  # artifacts landed
+        # serializes session.run_many: the session's caches/stats are not
+        # thread-safe, and the run()/step()-vs-pump guards are advisory
+        # (unlocked liveness reads) — this lock is the hard guarantee that
+        # only one dispatch drives the session at a time
+        self._dispatch = threading.Lock()
+        self._queue: list[tuple[int, DesignRequest, float]] = []
+        self._pending: set[int] = set()   # issued, not yet in `done`
         self._next_ticket = 0
         self.done: dict[int, DesignArtifact] = {}
+        self._pump: threading.Thread | None = None
+        self._closing = False
+        self._pump_error: BaseException | None = None
 
     @property
     def stats(self) -> collections.Counter:
         return self.session.stats
 
     def __len__(self) -> int:
-        return len(self._queue)
+        with self._lock:
+            return len(self._queue)
 
+    # -- submission ------------------------------------------------------
     def submit(self, request: DesignRequest) -> int:
-        """Enqueue a request; returns the ticket to collect its artifact."""
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self._queue.append((ticket, request))
+        """Enqueue a request; returns the ticket to collect its artifact.
+
+        Thread-safe; wakes the `serve()` pump (if running) so the
+        coalescing window starts counting from the oldest queued request."""
+        with self._lock:
+            if self._closing:
+                raise RuntimeError("DesignService is closing; "
+                                   "no new submissions accepted")
+            if self._pump_error is not None:
+                # nothing will serve this ticket: the pump died.  Refuse
+                # admission until close() surfaces (and clears) the error.
+                raise RuntimeError(
+                    "DesignService serve() pump failed; call close() to "
+                    "surface the error (its batch was restored to the "
+                    "queue), then serve() or run() again"
+                ) from self._pump_error
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._queue.append((ticket, request, time.monotonic()))
+            self._pending.add(ticket)
+            self._work.notify_all()
         return ticket
 
+    # -- synchronous drain -----------------------------------------------
     def step(self) -> dict[int, DesignArtifact]:
-        """Drain one coalesced batch (up to `max_coalesce` requests) and
+        """Dispatch one coalesced batch (up to `max_coalesce` requests) and
         return its per-ticket artifacts.
 
         A request whose requirements remove every Pareto point cannot
         poison the batch: it completes with `artifact.error` set (the
         session's non-strict mode) while the other tenants are served.
-        On an unexpected exception the batch is restored to the queue
-        so no tenant's submission is lost."""
-        batch, self._queue = (self._queue[:self.max_coalesce],
-                              self._queue[self.max_coalesce:])
+        On an unexpected exception the batch is restored — in order, at
+        the front of the queue — so no tenant's submission is lost.
+
+        Not valid while a `serve()` pump is running: the underlying
+        session is not thread-safe, so only one dispatcher may drive it."""
+        if self._pump_alive():
+            raise RuntimeError("step() while the serve() pump is active; "
+                               "the pump is the only dispatcher — use "
+                               "collect()/poll() instead")
+        return self._dispatch_once()
+
+    def _dispatch_once(self) -> dict[int, DesignArtifact]:
+        with self._lock:
+            batch = self._queue[:self.max_coalesce]
+            del self._queue[:self.max_coalesce]
         if not batch:
             return {}
         try:
-            artifacts = self.session.run_many([r for _, r in batch],
-                                              bucket_layouts=True,
-                                              strict=False)
+            with self._dispatch:
+                artifacts = self.session.run_many([r for _, r, _ in batch],
+                                                  bucket_layouts=True,
+                                                  strict=False)
         except Exception:
-            self._queue = batch + self._queue
+            with self._lock:
+                self._queue[:0] = batch
+                self._work.notify_all()
             raise
-        out = {ticket: artifacts[r] for ticket, r in batch}
-        self.done.update(out)
+        out = {ticket: artifacts[r] for ticket, r, _ in batch}
+        with self._lock:
+            self.done.update(out)
+            self._pending.difference_update(out)
+            self.stats["service_batches"] += 1
+            self.stats["service_batch_requests"] += len(out)
+            self._done_cv.notify_all()
         return out
 
     def run(self) -> dict[int, DesignArtifact]:
-        """Drain the whole queue; returns every completed ticket."""
-        while self._queue:
-            self.step()
-        return self.done
+        """Drain the whole queue synchronously; returns a snapshot of every
+        completed (uncollected) ticket.  Not valid while a `serve()` pump
+        is running — use `collect()`/`poll()` there."""
+        if self._pump_alive():
+            raise RuntimeError("run() while the serve() pump is active; "
+                               "use collect()/poll() instead")
+        while self._dispatch_once():
+            pass
+        with self._lock:
+            return dict(self.done)
 
-    def collect(self, ticket: int) -> DesignArtifact:
-        return self.done[ticket]
+    # -- ticket lifecycle ------------------------------------------------
+    def _check_known(self, ticket: int) -> None:
+        # lock held
+        if not 0 <= ticket < self._next_ticket:
+            raise UnknownTicket(f"ticket {ticket} was never issued by this "
+                                f"service (tickets 0..{self._next_ticket - 1})")
+        if ticket not in self._pending and ticket not in self.done:
+            raise UnknownTicket(f"ticket {ticket} was already collected "
+                                f"(use collect(..., keep_done=True) to keep "
+                                f"artifacts around)")
+
+    def poll(self, ticket: int) -> DesignArtifact | None:
+        """Non-blocking, non-destructive readiness probe: the artifact if
+        ready, `None` while the ticket is still queued / in flight.
+        Raises `UnknownTicket` for a ticket this service never issued, and
+        (like `collect`) surfaces a dead pump as `RuntimeError` — a
+        poll-only consumer must not spin forever on a ticket that nothing
+        is going to serve."""
+        with self._lock:
+            self._check_known(ticket)
+            art = self.done.get(ticket)
+            if art is None and self._pump_error is not None:
+                raise RuntimeError(
+                    f"ticket {ticket} cannot complete: the serve() pump "
+                    f"failed (its batch was restored to the queue; drain "
+                    f"with run()/step() or serve() again)"
+                ) from self._pump_error
+            return art
+
+    def collect(self, ticket: int, *, timeout: float | None = None,
+                keep_done: bool = False) -> DesignArtifact:
+        """Return (and pop) the ticket's artifact.
+
+        With a `serve()` pump running — or a `timeout` given — blocks
+        until the artifact lands, the timeout expires (`PendingTicket`),
+        or the pump fails (`RuntimeError` chaining the pump's exception;
+        the batch was restored to the queue).  Without a pump and without
+        a timeout, a still-pending ticket raises `PendingTicket`
+        immediately instead of deadlocking — drain with `run()`/`step()`.
+
+        Popping on collect keeps `done` bounded in a long-lived service;
+        pass `keep_done=True` to leave the artifact collectable again."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + max(timeout, 0.0))
+        with self._lock:
+            while True:
+                self._check_known(ticket)
+                art = self.done.get(ticket)
+                if art is not None:
+                    if not keep_done:
+                        del self.done[ticket]
+                    return art
+                if self._pump_error is not None:
+                    raise RuntimeError(
+                        f"ticket {ticket} cannot complete: the serve() pump "
+                        f"failed (its batch was restored to the queue; drain "
+                        f"with run()/step() or serve() again)"
+                    ) from self._pump_error
+                if deadline is None and not self._pump_alive():
+                    raise PendingTicket(
+                        f"ticket {ticket} is still pending and no serve() "
+                        f"pump is running; drain the queue with run()/step() "
+                        f"or pass collect(..., timeout=...) under serve()")
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise PendingTicket(f"ticket {ticket} still pending "
+                                        f"after {timeout:g}s")
+                # bounded wait so a pump that dies without notifying
+                # (or a run()-mode caller) cannot strand us
+                self._done_cv.wait(timeout=0.1 if remaining is None
+                                   else min(remaining, 0.1))
+
+    # -- async serve loop ------------------------------------------------
+    def _pump_alive(self) -> bool:
+        pump = self._pump
+        return pump is not None and pump.is_alive()
+
+    def serve(self) -> "DesignService":
+        """Start the coalescing pump thread (idempotent); returns `self`
+        so `with DesignService(...).serve() as svc:` reads naturally."""
+        with self._lock:
+            if self._pump_alive():
+                return self
+            if self._closing:
+                # a concurrent close() is joining the old pump; starting a
+                # second one here would orphan that drain (and race two
+                # dispatchers on the non-thread-safe session)
+                raise RuntimeError("serve() while close() is in progress; "
+                                   "wait for close() to return")
+            self._pump_error = None
+            self._pump = threading.Thread(target=self._pump_loop,
+                                          name="design-service-pump",
+                                          daemon=True)
+            self._pump.start()
+        return self
+
+    def _pump_loop(self) -> None:
+        try:
+            while True:
+                with self._lock:
+                    while True:
+                        if self._closing:
+                            if not self._queue:
+                                return          # graceful: queue drained
+                            break               # final drain dispatches
+                        n = len(self._queue)
+                        if n >= self.max_coalesce:
+                            break               # batch is full
+                        if n:
+                            oldest = self._queue[0][2]
+                            wait = (self.coalesce_window_s
+                                    - (time.monotonic() - oldest))
+                            if wait <= 0:
+                                break           # deadline of oldest request
+                            self._work.wait(timeout=wait)
+                        else:
+                            self._work.wait()
+                self._dispatch_once()
+        except Exception as e:   # step() already restored the batch
+            with self._lock:
+                self._pump_error = e
+                self._done_cv.notify_all()
+
+    def close(self) -> None:
+        """Graceful shutdown: stop admitting, let the pump drain the queue,
+        join it.  Idempotent; a no-op if `serve()` was never called.  If
+        the pump failed, the failing batch was restored to the queue
+        (tickets intact, in order) and the pump's exception is re-raised
+        here."""
+        with self._lock:
+            pump = self._pump
+            if pump is not None:
+                self._closing = True
+            self._work.notify_all()
+        if pump is not None:
+            # keep self._pump set while joining: a concurrent collect()
+            # must still see a live pump (no spurious PendingTicket during
+            # the final drain), and a concurrent serve() must not start a
+            # second dispatcher (it sees _closing and refuses)
+            pump.join()
+        with self._lock:
+            if self._pump is pump:
+                self._pump = None
+            self._closing = False
+            err, self._pump_error = self._pump_error, None
+        if err is not None:
+            raise RuntimeError(
+                "serve() pump failed; queued tickets were restored — "
+                "drain with run()/step() or serve() again") from err
+
+    def __enter__(self) -> "DesignService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

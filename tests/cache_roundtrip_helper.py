@@ -1,0 +1,32 @@
+"""Subprocess half of the cross-process artifact-cache round trip.
+
+Run as `python tests/cache_roundtrip_helper.py <cache_dir> <request_json>`
+(with `PYTHONPATH=src`): opens a *fresh* `DesignSession` over the given
+persistent cache, runs the request, and prints a JSON report the parent
+test (`tests/test_design_service_async.py`) and the CI smoke step
+assert on — a repeat request must be served entirely from disk
+(`explorer_dispatches == 0`, provenance `served_from ==
+"artifact_cache"`) with content equal to the parent's artifact.
+"""
+import json
+import sys
+
+
+def main() -> None:
+    cache_dir, request_json = sys.argv[1], sys.argv[2]
+    from repro.api import DesignRequest, DesignSession
+
+    session = DesignSession(artifact_cache=cache_dir)
+    artifact = session.run(DesignRequest.from_json(request_json))
+    json.dump({
+        "explorer_dispatches": int(session.stats["explorer_dispatches"]),
+        "layout_dispatches": int(session.stats["layout_dispatches"]),
+        "artifact_cache_hits": int(session.stats["artifact_cache_hits"]),
+        "served_from": artifact.provenance.served_from,
+        "ok": artifact.ok,
+        "summary": artifact.summary(),
+    }, sys.stdout)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,6 @@
 """Docs link & code-reference checker (stdlib only, CI-friendly).
 
-Checks, over README.md and docs/*.md:
+Checks, over README.md, ROADMAP.md and docs/*.md:
 
   1. Relative markdown links `[text](target)` point at files that exist
      (http(s) URLs and pure #anchors are skipped).
@@ -8,9 +8,11 @@ Checks, over README.md and docs/*.md:
      paths (contain "/" and a known suffix, or start with a top-level
      repo directory) — resolve against the repo root.
   3. Inline-code module references starting with `repro.` resolve to a
-     module/package under src/ (a trailing attribute segment is
-     allowed: `repro.core.explorer.distill_and_layout` passes because
-     `src/repro/core/explorer.py` exists).
+     module/package under src/.  A trailing attribute segment is
+     allowed (`repro.core.explorer.distill_and_layout` passes because
+     `src/repro/core/explorer.py` exists), and so is a CapWord class
+     segment followed by one attribute
+     (`repro.api.DesignSession.run_many`).
 
 Exit status is the number of broken references; each is printed as
 `file:line: message`.
@@ -33,7 +35,8 @@ TOP_DIRS = ("src/", "tests/", "examples/", "benchmarks/", "docs/",
 
 
 def doc_files() -> list[pathlib.Path]:
-    return [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+    return ([REPO / "README.md", REPO / "ROADMAP.md"]
+            + sorted((REPO / "docs").glob("*.md")))
 
 
 def check_link(md: pathlib.Path, target: str) -> str | None:
@@ -61,14 +64,16 @@ def check_path_ref(span: str) -> str | None:
 
 def check_module_ref(span: str) -> str | None:
     parts = span.split(".")
-    # longest prefix that resolves to a module file or package dir;
-    # at most one trailing segment may be an attribute of that module
+    # longest prefix that resolves to a module file or package dir; the
+    # tail may be one attribute, or a CapWord class plus one attribute
+    # (`repro.api.DesignSession.run_many`)
     for n in range(len(parts), 0, -1):
         base = REPO / "src" / pathlib.Path(*parts[:n])
         if base.with_suffix(".py").exists() or (base / "__init__.py").exists():
-            if len(parts) - n > 1:
+            tail = parts[n:]
+            if len(tail) > 2 or (len(tail) == 2 and not tail[0][:1].isupper()):
                 return (f"module reference {span}: {'.'.join(parts[:n])} "
-                        f"exists but {'.'.join(parts[n:])} nests too deep")
+                        f"exists but {'.'.join(tail)} nests too deep")
             return None
     return f"unresolvable module reference: {span}"
 
