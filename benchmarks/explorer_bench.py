@@ -64,7 +64,8 @@ def _batched_sweep(pop: int, gens: int):
         array_size=s, seed=sd, pop_size=pop, generations=gens,
         layout=False)) for s in SIZES for sd in SEEDS}
     arts = svc.run()
-    assert svc.stats["explorer_dispatches"] == 1, dict(svc.stats)
+    stats = svc.stats()
+    assert stats["explorer_dispatches"] == 1, stats
     return {c: arts[t].pareto for c, t in tickets.items()}
 
 

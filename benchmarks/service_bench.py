@@ -26,6 +26,18 @@ merged concurrent tenants) and the per-ticket p50/p95 latency from
 submit to artifact-in-hand.  Artifact content is asserted equal to the
 sequential baseline, same as the synchronous drain.
 
+A fourth scenario measures the **staged pipeline** executor against
+the serial pump on a deliberately multi-batch workload
+(`max_coalesce=1`: every request is its own batch, all submitted up
+front).  The serial pump runs each batch start-to-finish before the
+next; the pipeline overlaps batch N+1's exploration with batch N's
+layout and streams layout buckets.  Recorded: wall-clock, per-ticket
+p50/p95, per-stage busy seconds, and the explore/layout **overlap
+fraction** (simultaneously-busy wall-clock over the smaller stage's
+busy time — > 0 means the pipeline actually overlapped; the serial
+pump is structurally 0).  Artifacts are asserted ticket-for-ticket
+equal to the sequential baseline on both sides.
+
 Compile counts come from the `nsga2.TRACE_COUNTS["run_cell"]` probe and
 the session dispatch counters.  Results land in `BENCH_service.json` at
 the repo root so future PRs have a perf trajectory.
@@ -128,6 +140,24 @@ def _async_serve(requests, *, window_s: float, jitter_s: float,
     return artifacts, service, wall, latencies
 
 
+def _staged(requests, *, pipelined: bool, timeout_s: float = 600.0):
+    """The multi-batch pipeline workload: every request is its own batch
+    (`max_coalesce=1`), all submitted up front.  Under the staged
+    executor, batch N+1's exploration overlaps batch N's layout; under
+    the serial pump each batch runs start-to-finish before the next."""
+    service = DesignService(max_coalesce=1)
+    with service.serve(pipelined=pipelined):
+        t0 = time.perf_counter()
+        tickets = [service.submit(r) for r in requests]
+        artifacts, latencies = [], []
+        for t in tickets:   # finalize is FIFO: completion order == order
+            artifacts.append(service.collect(t, timeout=timeout_s))
+            latencies.append(time.perf_counter() - t0)
+        wall = time.perf_counter() - t0
+        stats = service.stats()
+    return artifacts, stats, wall, latencies
+
+
 def _timed(fn, *args):
     n0 = nsga2.TRACE_COUNTS["run_cell"]
     t0 = time.perf_counter()
@@ -155,9 +185,17 @@ def run(smoke: bool = False) -> dict:
     jitter_s = ASYNC_JITTER_SMOKE_S if smoke else ASYNC_JITTER_S
     asy, asvc, asy_wall, asy_lat = _async_serve(requests, window_s=window_s,
                                                 jitter_s=jitter_s)
-    astats = asvc.stats
+    astats = asvc.stats()
     async_equal = all(a.summary() == b.summary() for a, b in zip(seq, asy))
     batches = int(astats["service_batches"])
+
+    # warm the per-request layout programs first: the multi-batch workload
+    # compiles different batch shapes than the coalesced scenarios, and
+    # whichever side ran first would otherwise pay them alone
+    _staged(requests, pipelined=False)
+    srl, srl_stats, srl_wall, srl_lat = _staged(requests, pipelined=False)
+    pipe, pipe_stats, pipe_wall, pipe_lat = _staged(requests, pipelined=True)
+    busy = pipe_stats["stage_busy_s"]
     return {
         "n_requests": len(requests),
         "requests": [r.to_dict() for r in requests],
@@ -170,9 +208,9 @@ def run(smoke: bool = False) -> dict:
         "coalesced": {"cold_s": bat_cold, "warm_s": bat_warm,
                       "run_cell_traces": bat_traces,
                       "explorer_dispatches":
-                          int(service.stats["explorer_dispatches"]),
+                          int(service.stats()["explorer_dispatches"]),
                       "layout_bucket_dispatches":
-                          int(service.stats["layout_dispatches"])},
+                          int(service.stats()["layout_dispatches"])},
         "coalesced_speedup_cold": seq_cold / bat_cold,
         "coalesced_speedup_warm": seq_warm / bat_warm,
         "artifacts_equal": artifacts_equal,
@@ -187,6 +225,33 @@ def run(smoke: bool = False) -> dict:
                 int(astats["service_batch_requests"]) / max(batches, 1),
             "explorer_dispatches": int(astats["explorer_dispatches"]),
             "artifacts_equal": async_equal,
+        },
+        "pipelined": {
+            "batches": int(pipe_stats["service_batches"]),
+            "wall_s": pipe_wall,
+            "ticket_p50_s": float(np.percentile(pipe_lat, 50)),
+            "ticket_p95_s": float(np.percentile(pipe_lat, 95)),
+            "stage_busy_s": {k: float(v) for k, v in busy.items()},
+            "overlap_s": float(pipe_stats["pipeline_overlap_s"]),
+            "overlap_fraction":
+                float(pipe_stats["pipeline_overlap_fraction"]),
+            "artifacts_equal": all(a.summary() == b.summary()
+                                   for a, b in zip(seq, pipe)),
+            "serial": {
+                "batches": int(srl_stats["service_batches"]),
+                "wall_s": srl_wall,
+                "ticket_p50_s": float(np.percentile(srl_lat, 50)),
+                "ticket_p95_s": float(np.percentile(srl_lat, 95)),
+                "artifacts_equal": all(a.summary() == b.summary()
+                                       for a, b in zip(seq, srl)),
+            },
+            "wall_speedup_vs_serial": srl_wall / pipe_wall,
+            "p50_ratio_vs_serial":
+                float(np.percentile(pipe_lat, 50)
+                      / np.percentile(srl_lat, 50)),
+            "p95_ratio_vs_serial":
+                float(np.percentile(pipe_lat, 95)
+                      / np.percentile(srl_lat, 95)),
         },
     }
 
@@ -210,6 +275,14 @@ def main() -> None:
           f"p95={a['ticket_p95_s']:.3f}s batches={a['batches']} "
           f"coalescing_factor={a['coalescing_factor']:.2f} "
           f"artifacts_equal={a['artifacts_equal']}")
+    p = result["pipelined"]
+    print(f"pipelined: wall={p['wall_s']:.3f}s (serial pump "
+          f"{p['serial']['wall_s']:.3f}s, {p['wall_speedup_vs_serial']:.2f}x) "
+          f"p50={p['ticket_p50_s']:.3f}s p95={p['ticket_p95_s']:.3f}s "
+          f"(serial p50={p['serial']['ticket_p50_s']:.3f}s "
+          f"p95={p['serial']['ticket_p95_s']:.3f}s) "
+          f"overlap_fraction={p['overlap_fraction']:.2f} "
+          f"artifacts_equal={p['artifacts_equal']}")
     print(f"speedup cold={result['coalesced_speedup_cold']:.2f}x "
           f"warm={result['coalesced_speedup_warm']:.2f}x "
           f"artifacts_equal={result['artifacts_equal']} -> {args.out}")

@@ -2,11 +2,14 @@
 
 Several tenants submit different `DesignRequest`s — different array
 sizes, seeds, and application requirements — against a *running*
-`DesignService` pump (`serve()`): submissions landing inside the
-coalescing window are folded into one compiled MOGA sweep dispatch, the
-union of surviving specs is laid out in routing-grid-shape buckets, and
-each tenant blocks in `collect(timeout=...)` until its ticketed
-artifact lands.
+`DesignService` staged pipeline (`serve()`): submissions landing
+inside the coalescing window are folded into one compiled MOGA sweep
+dispatch, the union of surviving specs is laid out in streamed
+routing-grid-shape buckets (each bucket dispatches as soon as the
+distill stage forms it, overlapped with any following batch's
+exploration), and each tenant blocks in `collect(timeout=...)` until
+its ticketed artifact lands.  The closing stats line shows the
+per-stage busy clocks and the explore∥layout overlap gauge.
 
 A persistent artifact cache backs the session, so re-running this
 script (same `--cache-dir`) serves every tenant from disk with zero
@@ -60,7 +63,7 @@ def main() -> None:
               f"survivors, best H={best.h} W={best.w} L={best.l} "
               f"B={best.b_adc} | served from {p.served_from}, coalesced "
               f"with {p.coalesced - 1} other request(s), {laid}")
-    s = svc.stats
+    s = svc.stats()   # point-in-time snapshot: counters + pipeline gauges
     factor = (s["service_batch_requests"] / s["service_batches"]
               if s["service_batches"] else 0.0)
     print(f"\nservice: {s['requests_served']} requests -> "
@@ -69,6 +72,12 @@ def main() -> None:
           f"dispatch(es), {s['run_cell_traces']} sweep-program trace(s), "
           f"{s['layout_dispatches']} layout bucket dispatch(es), "
           f"{s['artifact_cache_hits']} artifact-cache hit(s)")
+    busy = s["stage_busy_s"]
+    print(f"pipeline: explore {busy['explore']:.3f}s / distill "
+          f"{busy['distill']:.3f}s / layout {busy['layout']:.3f}s / "
+          f"finalize {busy['finalize']:.3f}s busy, explore∥layout overlap "
+          f"{s['pipeline_overlap_s']:.3f}s "
+          f"(fraction {s['pipeline_overlap_fraction']:.2f})")
 
 
 if __name__ == "__main__":

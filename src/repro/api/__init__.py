@@ -22,7 +22,9 @@ The legacy entry points (`repro.core.explorer.explore` and friends)
 survive as thin deprecation shims over this package.
 """
 from repro.api.request import DesignRequest, Requirements
-from repro.api.session import DesignArtifact, DesignSession, Provenance
+from repro.api.session import (BucketResult, DesignArtifact, DesignSession,
+                               DistilledBatch, ExploredBatch, LayoutBucket,
+                               Provenance)
 from repro.api.artifact_cache import ArtifactCache
 
 _DEFAULT_SESSION: DesignSession | None = None
@@ -38,4 +40,5 @@ def default_session() -> DesignSession:
 
 __all__ = ["DesignRequest", "Requirements", "DesignArtifact",
            "DesignSession", "Provenance", "ArtifactCache",
-           "default_session"]
+           "ExploredBatch", "DistilledBatch", "LayoutBucket",
+           "BucketResult", "default_session"]

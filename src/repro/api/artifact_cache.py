@@ -27,6 +27,16 @@ counted miss (`cache.stats["rejects"]`, alongside `"hits"`/
 `"misses"`/`"writes"` — the session mirrors hits/misses/writes into
 its own `stats` as `artifact_cache_*`), never an exception: the caller
 just recomputes and overwrites it.
+
+Eviction (for long-lived fleets): `max_entries` bounds the entry count
+with LRU-by-mtime pruning, `ttl_s` expires entries whose mtime is
+older than the window; both run on `put` (`_prune`), and a `get` hit
+refreshes the entry's mtime so hot requests survive the LRU.  Evicted
+counts land in `stats["ttl_evictions"]` / `stats["lru_evictions"]`
+(plus `stats["prunes"]` per pass).  Eviction is best-effort under
+concurrency: two processes pruning the same directory both succeed
+(unlink errors are ignored), and a racing reader of an evicted entry
+just records a miss and recomputes.
 """
 from __future__ import annotations
 
@@ -34,6 +44,7 @@ import collections
 import json
 import os
 import pathlib
+import time
 
 from repro.api.request import DesignRequest
 from repro.api.session import ARTIFACT_SCHEMA, DesignArtifact
@@ -42,10 +53,18 @@ from repro.api.session import ARTIFACT_SCHEMA, DesignArtifact
 class ArtifactCache:
     """Disk store of `DesignArtifact`s, keyed by `DesignRequest.sha()`."""
 
-    def __init__(self, root) -> None:
+    def __init__(self, root, *, max_entries: int | None = None,
+                 ttl_s: float | None = None) -> None:
+        if max_entries is not None and max_entries <= 0:
+            raise ValueError("max_entries must be positive (or None)")
+        if ttl_s is not None and ttl_s <= 0:
+            raise ValueError("ttl_s must be positive (or None)")
         self.root = pathlib.Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self.max_entries = max_entries
+        self.ttl_s = ttl_s
         self.stats: collections.Counter = collections.Counter()
+        self._puts_since_prune = 0
 
     def path_for(self, request: DesignRequest) -> pathlib.Path:
         return self.root / f"{request.sha()}.json"
@@ -77,14 +96,57 @@ class ArtifactCache:
             self.stats["rejects"] += 1
             return None
         self.stats["hits"] += 1
+        try:
+            os.utime(path)   # LRU recency: a hit must outlive cold entries
+        except OSError:
+            pass             # entry raced away / read-only store: still a hit
         return artifact
 
     def put(self, artifact: DesignArtifact) -> pathlib.Path:
-        """Store (atomically); returns the entry path."""
+        """Store (atomically), then prune; returns the entry path.
+
+        Pruning costs a full directory scan, so it is amortized: with a
+        large `max_entries` it runs once every `max_entries // 8` puts
+        (the store may transiently overshoot the bound by 12.5%); with
+        a small bound — or a TTL-only cache — it runs on every put."""
         path = self.path_for(artifact.request)
         artifact.to_json(path)
         self.stats["writes"] += 1
+        if self.max_entries is not None or self.ttl_s is not None:
+            self._puts_since_prune += 1
+            if self._puts_since_prune >= max(1, (self.max_entries or 0) // 8):
+                self._puts_since_prune = 0
+                self._prune()
         return path
+
+    def _prune(self) -> None:
+        """TTL expiry + LRU-by-mtime bound.  The entry just written is
+        the newest by mtime, so a prune right after `put` can never
+        evict it (with `max_entries >= 1`)."""
+        self.stats["prunes"] += 1
+        now = time.time()
+        entries = []
+        for p in self.root.glob("*.json"):
+            try:
+                entries.append((p.stat().st_mtime, p))
+            except OSError:
+                pass   # raced away under a concurrent prune
+        entries.sort()   # oldest first
+        drop = []
+        if self.ttl_s is not None:
+            expired = [e for e in entries if now - e[0] > self.ttl_s]
+            self.stats["ttl_evictions"] += len(expired)
+            drop += expired
+            entries = entries[len(expired):]
+        if self.max_entries is not None and len(entries) > self.max_entries:
+            lru = entries[:len(entries) - self.max_entries]
+            self.stats["lru_evictions"] += len(lru)
+            drop += lru
+        for _, p in drop:
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
 
     def __contains__(self, request: DesignRequest) -> bool:
         return self.path_for(request).exists()

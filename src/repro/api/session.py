@@ -21,15 +21,33 @@ end to end.  It owns two caches:
     across restarts — served artifacts carry
     `provenance.served_from == "artifact_cache"`.
 
-`run()` executes one request; `run_many()` executes a batch and is the
-coalescing engine `repro.serve.design_service.DesignService` drives:
-requests in the same `explore_group()` fold into ONE `explore_cells`
-dispatch, and (under `bucket_layouts=True`) the surviving specs of all
-requests are laid out in routing-grid-shape buckets (shapes quantized
-to powers of two so bucketing cannot degenerate into per-spec
-dispatches) — heterogeneous Pareto sets no longer pay padded-batch
-waste for the biggest member — then demuxed back to per-request
-artifacts.
+Execution is factored into four first-class **stages** with explicit
+inter-stage payload types, so the sequential drivers and the staged
+pipeline executor (`repro.serve.design_service`) run the *same* code
+and cannot diverge:
+
+  * `explore_stage(requests)` — dedupe, consult the persistent
+    artifact cache, and fold every cache-miss request in the same
+    `explore_group()` into ONE `explore_cells` dispatch
+    (-> `ExploredBatch`);
+  * `distill_stage(batch)` — apply each request's requirements and
+    form the layout buckets: under `bucket_layouts=True` the union of
+    surviving specs is bucketed by quantized routing-grid shape
+    (shapes quantized to powers of two so bucketing cannot degenerate
+    into per-spec dispatches — heterogeneous Pareto sets no longer pay
+    padded-batch waste for the biggest member); otherwise one
+    whole-request bucket per request (-> `DistilledBatch`, whose
+    `buckets` list is the streamable unit of layout work);
+  * `layout_stage(bucket)` — one `LayoutBucket` through the batched
+    flow (`eda.batched_flow.iter_layout_buckets`), independently
+    dispatchable per bucket (-> `BucketResult`);
+  * `finalize_stage(batch, bucket_results)` — demux per-request
+    artifacts, stamp provenance, fill the persistent cache.
+
+`run()` and `run_many()` are thin sequential drivers over these
+stages; the service's pipeline executor drives the same stage
+functions from per-stage workers so batch N+1's exploration overlaps
+batch N's layout and buckets stream as they are formed.
 
 Timing lives here, in the artifact provenance, not in the library flow
 modules: `repro.eda.batched_flow` is pure compute.
@@ -51,13 +69,15 @@ from repro.core.batched_explorer import explore_cells, sweep_program
 from repro.core.explorer import ParetoResult
 from repro.api.request import DesignRequest
 from repro.core.acim_spec import MacroSpec
-from repro.eda.batched_flow import BatchedLayoutResult, generate_layouts
+from repro.eda.batched_flow import BatchedLayoutResult, iter_layout_buckets
 
 
 # Stamped into every serialized artifact; `repro.api.artifact_cache`
 # refuses entries whose stamp differs, so a fleet upgrade cannot feed a
 # new reader stale-layout JSON.  Bump on any to_dict/from_dict change.
-ARTIFACT_SCHEMA = 1
+# 2: provenance gained the staged-pipeline fields (explore_wait_s,
+#    layout_wait_s, pipelined).
+ARTIFACT_SCHEMA = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +106,14 @@ class Provenance:
     # dispatch), "front_cache" (this process's in-memory front cache), or
     # "artifact_cache" (the persistent cross-process store)
     served_from: str = "explorer"
+    # staged-pipeline facts (zero on the sequential drivers): how long
+    # the request sat in inter-stage queues before its explore batch was
+    # picked up / before its layout buckets dispatched (mean over the
+    # buckets the request touched), and whether the artifact was
+    # produced by the staged pipeline executor at all
+    explore_wait_s: float = 0.0
+    layout_wait_s: float = 0.0
+    pipelined: bool = False
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -229,6 +257,65 @@ def _bucket_key(spec: MacroSpec, coarse: int, capacity: int,
             1 << (gh - 1).bit_length(), 1 << (gw - 1).bit_length())
 
 
+# ----------------------------------------------------------------------
+# Inter-stage payload types: the explicit contracts between the four
+# stages.  The sequential drivers (`run`/`run_many`) and the staged
+# pipeline executor (`repro.serve.design_service`) both move exactly
+# these values between exactly these stage functions.
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LayoutBucket:
+    """One streamable unit of layout work: the specs sharing a quantized
+    routing-grid shape (shared bucket, `request is None`) or one
+    request's whole distilled set (`request` set — the single-request
+    path, which keeps the in-memory layout tensors)."""
+
+    key: tuple
+    coarse: int
+    capacity: int
+    specs: tuple[MacroSpec, ...]
+    request: DesignRequest | None = None
+
+
+@dataclasses.dataclass
+class BucketResult:
+    """`layout_stage`'s product for one bucket."""
+
+    bucket: LayoutBucket
+    rows: dict                        # MacroSpec -> metrics row
+    elapsed_s: float
+    result: BatchedLayoutResult | None = None   # whole-request buckets only
+    queue_wait_s: float = 0.0         # stamped by the pipelined executor
+
+
+@dataclasses.dataclass
+class ExploredBatch:
+    """`explore_stage` -> `distill_stage` payload."""
+
+    requests: list                    # deduped cache-miss remainder, in order
+    served: dict                      # DesignRequest -> DesignArtifact
+    fronts: dict                      # DesignRequest -> ParetoResult
+    info: dict                        # DesignRequest -> explore-info dict
+
+
+@dataclasses.dataclass
+class DistilledBatch:
+    """`distill_stage` -> `layout_stage`/`finalize_stage` payload.
+
+    `buckets` is ordered (first-seen) and each entry is independently
+    dispatchable — the pipeline executor submits every bucket to the
+    layout worker as soon as `distill_stage` returns, instead of
+    blocking on the whole union.  `spec_keys[r]` aligns with
+    `distilled[r].specs`, naming the bucket each spec landed in (the
+    demux map `finalize_stage` uses)."""
+
+    explored: ExploredBatch
+    distilled: dict                   # DesignRequest -> ParetoResult
+    errors: dict                      # DesignRequest -> message
+    buckets: list                     # [LayoutBucket], formation order
+    spec_keys: dict                   # DesignRequest -> tuple[bucket key, ...]
+
+
 class _SweepProgram:
     """One program-cache entry: the compiled sweep for a shape signature."""
 
@@ -327,49 +414,21 @@ class DesignSession:
                capacity: int = 4) -> BatchedLayoutResult:
         """One batched layout dispatch chain for a spec set."""
         self.stats["layout_dispatches"] += 1
-        return generate_layouts(specs, coarse=coarse, capacity=capacity)
+        (res,) = iter_layout_buckets([(tuple(specs), coarse, capacity)])
+        return res
 
-    def _bucketed_rows(self, requests, distilled):
-        """Lay out the union of surviving specs in quantized grid-shape
-        buckets.  Returns ({(coarse, capacity, spec): metrics row},
-        {bucket key: per-spec wall-clock share})."""
-        buckets: dict[tuple, dict] = {}
-        for r in requests:
-            if not r.layout:
-                continue
-            for spec in distilled[r].specs:
-                key = _bucket_key(spec, r.coarse, r.capacity, self.stats)
-                buckets.setdefault(key, {})[spec] = None
-        rows: dict[tuple, dict] = {}
-        spec_share: dict[tuple, float] = {}
-        for key, specs in buckets.items():
-            coarse, capacity = key[0], key[1]
-            t0 = time.perf_counter()
-            res = self.layout(tuple(specs), coarse=coarse, capacity=capacity)
-            spec_share[key] = (time.perf_counter() - t0) / len(specs)
-            for spec, row in zip(res.specs, res.metrics_rows()):
-                rows[(coarse, capacity, spec)] = row
-        return rows, spec_share
+    # -- the four stages --------------------------------------------------
+    def explore_stage(self, requests: Iterable[DesignRequest]
+                      ) -> ExploredBatch:
+        """Stage 1 — dedupe, consult the persistent artifact cache, and
+        fold every cache-miss request in the same explore group into one
+        `explore_cells` dispatch.
 
-    # -- the end-to-end run ----------------------------------------------
-    def run_many(self, requests: Iterable[DesignRequest], *,
-                 bucket_layouts: bool = True, strict: bool = True
-                 ) -> dict[DesignRequest, DesignArtifact]:
-        """Execute a request batch: one coalesced exploration dispatch per
-        explore group, then grid-shape-bucketed (or per-request) layout,
-        demuxed into per-request artifacts.
-
-        A request whose requirements remove every Pareto point raises
-        `ValueError` under `strict=True`; under `strict=False` (the
-        multi-tenant path) it gets an artifact with `error` set and the
-        rest of the batch is served normally.
-
-        With a persistent `artifact_cache`, requests found there are
-        served directly (zero explorer/layout dispatches, provenance
-        re-stamped `served_from="artifact_cache"`); the remainder runs
-        the normal coalesced pipeline and is written back."""
+        Requests found in the artifact cache land in `.served` with
+        provenance re-stamped (`served_from="artifact_cache"`, zero
+        dispatches); the remainder carries its fronts + explore info."""
         all_requests = list(dict.fromkeys(requests))
-        out: dict[DesignRequest, DesignArtifact] = {}
+        served: dict[DesignRequest, DesignArtifact] = {}
         if self.artifact_cache is not None:
             for r in all_requests:
                 t0 = time.perf_counter()
@@ -383,18 +442,32 @@ class DesignSession:
                     total_s=time.perf_counter() - t0, new_traces=0,
                     explorer_dispatches=0, layout_dispatches=0,
                     front_cache_hit=False, coalesced=1,
+                    explore_wait_s=0.0, layout_wait_s=0.0, pipelined=False,
                     served_from="artifact_cache")
-                out[r] = dataclasses.replace(hit, provenance=prov)
-        requests = [r for r in all_requests if r not in out]
-        if not requests:
-            self.stats["requests_served"] += len(out)
-            return out
-        fronts, info = self._fronts_for(requests)
+                served[r] = dataclasses.replace(hit, provenance=prov)
+        remainder = [r for r in all_requests if r not in served]
+        fronts, info = (self._fronts_for(remainder) if remainder
+                        else ({}, {}))
+        return ExploredBatch(requests=remainder, served=served,
+                             fronts=fronts, info=info)
+
+    def distill_stage(self, explored: ExploredBatch, *,
+                      strict: bool = True, bucket_layouts: bool = True
+                      ) -> DistilledBatch:
+        """Stage 2 — apply each request's requirements and form the
+        layout buckets.
+
+        A request whose requirements remove every Pareto point raises
+        `ValueError` under `strict=True`; under `strict=False` (the
+        multi-tenant path) it is recorded in `.errors` and the rest of
+        the batch proceeds.  Buckets are the quantized grid-shape union
+        (`bucket_layouts=True`) or one whole-request bucket each."""
         distilled: dict[DesignRequest, ParetoResult] = {}
         errors: dict[DesignRequest, str] = {}
-        for r in requests:
-            d = (fronts[r] if r.requirements.is_noop
-                 else fronts[r].filter(**r.requirements.as_filter_kwargs()))
+        for r in explored.requests:
+            d = (explored.fronts[r] if r.requirements.is_noop
+                 else explored.fronts[r].filter(
+                     **r.requirements.as_filter_kwargs()))
             if r.layout and not len(d):
                 msg = (f"requirements {r.requirements} removed every Pareto "
                        f"point for request {r.sha()} "
@@ -405,56 +478,134 @@ class DesignSession:
                 errors[r] = msg
             distilled[r] = d
 
-        laid = [r for r in requests if r.layout and r not in errors]
-        results: dict[DesignRequest, BatchedLayoutResult | None] = \
-            {r: None for r in requests}
-        rows_for: dict[DesignRequest, tuple[dict, ...] | None] = \
-            {r: None for r in requests}
-        layout_s = {r: 0.0 for r in requests}
-        buckets_for = {r: 0 for r in requests}
+        laid = [r for r in explored.requests
+                if r.layout and r not in errors]
+        buckets: list[LayoutBucket] = []
+        spec_keys: dict[DesignRequest, tuple] = {}
         if bucket_layouts:
-            rows, spec_share = self._bucketed_rows(laid, distilled)
+            members: dict[tuple, dict] = {}   # key -> ordered spec set
             for r in laid:
-                # recompute without stats: _bucketed_rows already counted
-                # this exact (request, spec) lookup once
-                keys = [_bucket_key(s, r.coarse, r.capacity)
-                        for s in distilled[r].specs]
-                rows_for[r] = tuple(rows[(r.coarse, r.capacity, s)]
-                                    for s in distilled[r].specs)
-                buckets_for[r] = len(set(keys))
-                layout_s[r] = sum(spec_share[k] for k in keys)
+                keys = []
+                for spec in distilled[r].specs:
+                    key = _bucket_key(spec, r.coarse, r.capacity, self.stats)
+                    members.setdefault(key, {})[spec] = None
+                    keys.append(key)
+                spec_keys[r] = tuple(keys)
+            buckets = [LayoutBucket(key=k, coarse=k[0], capacity=k[1],
+                                    specs=tuple(specs))
+                       for k, specs in members.items()]
         else:
             for r in laid:
-                t0 = time.perf_counter()
-                res = self.layout(distilled[r].specs, coarse=r.coarse,
-                                  capacity=r.capacity)
-                layout_s[r] = time.perf_counter() - t0
-                results[r] = res
-                rows_for[r] = tuple(res.metrics_rows())
-                buckets_for[r] = 1
+                key = ("request", r.sha())
+                buckets.append(LayoutBucket(key=key, coarse=r.coarse,
+                                            capacity=r.capacity,
+                                            specs=distilled[r].specs,
+                                            request=r))
+                spec_keys[r] = tuple(key for _ in distilled[r].specs)
+        return DistilledBatch(explored=explored, distilled=distilled,
+                              errors=errors, buckets=buckets,
+                              spec_keys=spec_keys)
 
-        for r in requests:
-            i = info[r]
+    def layout_stage(self, bucket: LayoutBucket) -> BucketResult:
+        """Stage 3 — one bucket through the batched flow: a single
+        `generate_layouts` dispatch chain, independent of every other
+        bucket (what lets the pipeline executor stream them)."""
+        t0 = time.perf_counter()
+        res = self.layout(bucket.specs, coarse=bucket.coarse,
+                          capacity=bucket.capacity)
+        dt = time.perf_counter() - t0
+        return BucketResult(bucket=bucket,
+                            rows=dict(zip(res.specs, res.metrics_rows())),
+                            elapsed_s=dt,
+                            result=(res if bucket.request is not None
+                                    else None))
+
+    def finalize_stage(self, batch: DistilledBatch,
+                       bucket_results: Iterable[BucketResult], *,
+                       waits: dict | None = None, pipelined: bool = False
+                       ) -> dict[DesignRequest, DesignArtifact]:
+        """Stage 4 — demux bucket rows back to per-request artifacts,
+        stamp provenance (fair-share wall-clock, queue waits), and fill
+        the persistent artifact cache.
+
+        `waits` optionally maps request -> explore-queue wait seconds
+        (the pipelined executor's measurement); layout queue waits ride
+        in on each `BucketResult.queue_wait_s`."""
+        explored = batch.explored
+        results = {br.bucket.key: br for br in bucket_results}
+        waits = waits or {}
+        out: dict[DesignRequest, DesignArtifact] = {}
+        for r, art in explored.served.items():
+            if pipelined:
+                prov = dataclasses.replace(
+                    art.provenance, pipelined=True,
+                    explore_wait_s=waits.get(r, 0.0))
+                art = dataclasses.replace(art, provenance=prov)
+            out[r] = art
+        for r in explored.requests:
+            i = explored.info[r]
+            keys = batch.spec_keys.get(r, ())
+            touched = [results[k] for k in dict.fromkeys(keys)]
+            layout_s = sum(results[k].elapsed_s / len(results[k].bucket.specs)
+                           for k in keys)
+            layout_wait = (sum(br.queue_wait_s for br in touched)
+                           / len(touched) if touched else 0.0)
+            rows_for = (tuple(results[k].rows[s] for k, s
+                              in zip(keys, batch.distilled[r].specs))
+                        if keys else None)
+            layouts = next((br.result for br in touched
+                            if br.bucket.request is r), None)
             prov = Provenance(
                 request_sha=r.sha(), explore_s=i["explore_s"],
-                layout_s=layout_s[r],
-                total_s=i["explore_s"] + layout_s[r],
+                layout_s=layout_s,
+                total_s=i["explore_s"] + layout_s,
                 new_traces=i["new_traces"],
                 explorer_dispatches=i["dispatches"],
-                layout_dispatches=buckets_for[r],
+                layout_dispatches=len(touched),
                 front_cache_hit=i["cache_hit"], coalesced=i["coalesced"],
                 served_from=("front_cache" if i["cache_hit"]
-                             else "explorer"))
-            art = DesignArtifact(request=r, pareto=distilled[r],
-                                 layout_rows=rows_for[r],
-                                 provenance=prov, layouts=results[r],
-                                 error=errors.get(r))
+                             else "explorer"),
+                explore_wait_s=waits.get(r, 0.0),
+                layout_wait_s=layout_wait, pipelined=pipelined)
+            art = DesignArtifact(request=r, pareto=batch.distilled[r],
+                                 layout_rows=rows_for,
+                                 provenance=prov, layouts=layouts,
+                                 error=batch.errors.get(r))
             if self.artifact_cache is not None and art.ok:
                 self.artifact_cache.put(art)
                 self.stats["artifact_cache_writes"] += 1
             out[r] = art
         self.stats["requests_served"] += len(out)
         return out
+
+    # -- the end-to-end drivers -------------------------------------------
+    def run_many(self, requests: Iterable[DesignRequest], *,
+                 bucket_layouts: bool = True, strict: bool = True
+                 ) -> dict[DesignRequest, DesignArtifact]:
+        """Execute a request batch sequentially through the four stages:
+        one coalesced exploration dispatch per explore group, then
+        grid-shape-bucketed (or per-request) layout, demuxed into
+        per-request artifacts.
+
+        This is the same stage code the pipelined
+        `repro.serve.design_service.DesignService` executor drives from
+        per-stage workers — the sequential and pipelined paths cannot
+        diverge because there is only one implementation of each stage.
+
+        A request whose requirements remove every Pareto point raises
+        `ValueError` under `strict=True`; under `strict=False` (the
+        multi-tenant path) it gets an artifact with `error` set and the
+        rest of the batch is served normally.
+
+        With a persistent `artifact_cache`, requests found there are
+        served directly (zero explorer/layout dispatches, provenance
+        re-stamped `served_from="artifact_cache"`); the remainder runs
+        the normal coalesced pipeline and is written back."""
+        explored = self.explore_stage(requests)
+        batch = self.distill_stage(explored, strict=strict,
+                                   bucket_layouts=bucket_layouts)
+        return self.finalize_stage(
+            batch, (self.layout_stage(b) for b in batch.buckets))
 
     def run(self, request: DesignRequest) -> DesignArtifact:
         """Execute one request end to end (single-batch layout, so the

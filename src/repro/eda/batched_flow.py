@@ -27,10 +27,13 @@ stage is array-programmed over a stacked spec batch:
   * **metrics / netlist stats** — closed-form (`netlist.stats_for_spec`)
     and vectorized over the batch.
 
-`generate_layouts(specs)` is the engine entry point; the supported
-front-end is `repro.api.DesignSession` (which chains exploration into
-it and buckets multi-tenant batches by routing-grid shape before
-calling it — see `repro.serve.design_service`).  Per-spec results
+`generate_layouts(specs)` is the engine entry point for one batch;
+`iter_layout_buckets(...)` streams a sequence of grid-shape buckets
+through it, yielding each bucket's result incrementally (what the
+staged pipeline executor consumes).  The supported front-end is
+`repro.api.DesignSession` (which chains exploration into it and
+buckets multi-tenant batches by routing-grid shape before calling it —
+see `repro.serve.design_service`).  Per-spec results
 unpack to the sequential dataclasses via `BatchedLayoutResult
 .placements()` / `.drc_reports()` for interop, and
 `tests/test_batched_flow.py` asserts batched == sequential per spec
@@ -486,6 +489,23 @@ class BatchedLayoutResult:
         with open(path, "w") as f:
             json.dump({"specs": [s.as_tuple() for s in self.specs],
                        "points": self.metrics_rows()}, f, indent=1)
+
+
+def iter_layout_buckets(buckets, *, use_kernel: bool | None = None):
+    """Stream a sequence of layout buckets through the batched flow.
+
+    `buckets` is an iterable of `(specs, coarse, capacity)` triples —
+    one routing-grid-shape bucket each (see the bucketing in
+    `repro.api.session`).  Each bucket's `BatchedLayoutResult` is
+    yielded as soon as its dispatch chain completes, so a consumer (the
+    staged pipeline executor in `repro.serve.design_service`, or a
+    plain `for` loop) can overlap downstream work — artifact
+    finalization, the next batch's exploration — with the remaining
+    buckets instead of blocking until the whole union is laid out.
+    """
+    for specs, coarse, capacity in buckets:
+        yield generate_layouts(specs, coarse=coarse, capacity=capacity,
+                               use_kernel=use_kernel)
 
 
 def generate_layouts(specs, *, coarse: int = 64, capacity: int = 4,

@@ -1,4 +1,5 @@
-"""Multi-tenant design service: deadline-coalescing, thread-pumped front door.
+"""Multi-tenant design service: a staged-pipeline, deadline-coalescing
+front door.
 
 The design-flow counterpart of `repro.serve.engine.ServeEngine`'s slot
 model: concurrent users `submit()` `DesignRequest`s and collect
@@ -9,51 +10,64 @@ across tenants.  Two driving modes share one queue:
     `max_coalesce` requests), `run()` drains everything.  This is the
     PR-3 shape and stays the right tool for scripted batch jobs
     (`explore_sizes`, the benchmarks' cold/warm sweeps).
-  * **async serve loop** — `serve()` starts a pump thread with
-    latency-bounded coalescing windows, in the style of `ServeEngine`'s
-    slot refill: a batch dispatches when either `max_coalesce` requests
-    have queued or `coalesce_window_s` has elapsed since the *oldest*
-    queued request (admit-until-deadline).  `submit()`/`poll()`/
-    `collect(timeout=...)` are thread-safe; `close()` (or leaving the
-    `with` block) drains the queue gracefully and joins the pump.
+  * **staged pipeline** — `serve()` starts an admission pump with
+    latency-bounded coalescing windows (dispatch at `max_coalesce`
+    queued OR `coalesce_window_s` past the oldest request) feeding four
+    stage workers over bounded queues:
 
-Each dispatched batch goes to `DesignSession.run_many`, which
+        admission ─> explore ─> distill ─> layout ─> finalize
+                      (batch)    (batch)   (bucket)   (batch)
 
-  * coalesces every request in the same explore group (equal MOGA
-    budget / calibration / backend knobs) into ONE `explore_cells`
-    dispatch — concurrent tenants share the compiled sweep program and
-    a single padded population stack instead of dispatching per user;
-  * buckets the union of surviving specs by routing-grid shape before
-    `generate_layouts`, so a mixed tenant population does not pay
-    padded-batch waste for the biggest member;
-  * consults / fills the session's persistent artifact cache when one
-    is configured (`repro.api.artifact_cache.ArtifactCache`), so a
-    fleet of service processes shares exploration results;
-  * demuxes per-request artifacts whose content is equal to what the
-    sequential legacy path produces for each request alone — asserted
-    in `tests/test_design_api.py` and `tests/test_design_service_async.py`.
+    Each stage runs the *same* `DesignSession` stage function the
+    sequential `run_many` driver uses (`explore_stage`,
+    `distill_stage`, `layout_stage`, `finalize_stage` — see
+    `repro.api.session`), so pipelined and sequential execution cannot
+    diverge: artifacts are ticket-for-ticket equal (asserted in
+    `tests/test_design_service_pipeline.py`).  What the pipeline buys
+    is **overlap**: batch N+1's exploration runs while batch N's layout
+    buckets are still in flight, and layout buckets *stream* — the
+    distill worker submits each bucket to the layout worker the moment
+    it is formed, instead of blocking until the whole union is laid
+    out.  `serve(pipelined=False)` falls back to the PR-4 serial pump
+    (one thread, one coalesced batch at a time) for comparison —
+    `benchmarks/service_bench.py` records both.
+
+Stage-safety: the `DesignSession` is not thread-safe in general, but
+the stages partition its state — only the explore worker touches the
+program/front caches, only the distill worker forms buckets, only the
+layout worker dispatches layouts, only the finalize worker writes the
+artifact cache — and each `stats` counter key has a single writer
+stage.  `run()`/`step()` are refused while a pump is active so no
+second dispatcher can break that partition.
 
 Failure semantics: a request whose requirements remove every Pareto
 point completes with `artifact.error` set (non-strict mode) and cannot
-poison its batch.  An *unexpected* exception inside a dispatch restores
-the whole batch to the FRONT of the queue — no ticket is lost or
-reordered — and, on the pump path, is re-raised from `close()` (and
-surfaced to blocked `collect()` callers).
+poison its batch.  An *unexpected* exception inside any stage stops
+the pipeline (first failure wins): it is surfaced to blocked
+`collect()` callers and re-raised from `close()`, and every in-flight
+batch is restored — in admission order, at the FRONT of the queue — so
+no ticket is lost or reordered.
 
-Dispatch accounting lives in `service.stats` (a view of the session's
-counter): `explorer_dispatches`, `layout_dispatches`,
-`run_cell_traces`, cache hit/miss counts, plus the service-level
+Accounting: `service.stats()` returns a point-in-time **snapshot** —
+session + service counters (`explorer_dispatches`,
+`layout_dispatches`, `run_cell_traces`, cache hits/misses, the
 `service_batches` / `service_batch_requests` pair whose ratio is the
-realized coalescing factor.
+realized coalescing factor) plus live pipeline gauges (queue depths,
+per-stage occupancy and cumulative busy time, and the explore/layout
+overlap clock the benchmark's overlap fraction is computed from).
 """
 from __future__ import annotations
 
 import collections
+import contextlib
+import queue
 import threading
 import time
 
 from repro.api.request import DesignRequest
 from repro.api.session import DesignArtifact, DesignSession
+
+_STAGES = ("explore", "distill", "layout", "finalize")
 
 
 class UnknownTicket(KeyError):
@@ -70,37 +84,116 @@ class PendingTicket(RuntimeError):
     tell "wait longer / drain the queue" from "you never submitted this"."""
 
 
+class _Batch:
+    """One coalesced batch moving through the staged pipeline."""
+
+    __slots__ = ("entries", "admitted_at", "explored", "distilled",
+                 "results", "remaining", "waits")
+
+    def __init__(self, entries):
+        self.entries = entries          # [(ticket, request, t_submit)]
+        self.admitted_at = time.monotonic()
+        self.explored = None            # ExploredBatch after explore
+        self.distilled = None           # DistilledBatch after distill
+        self.results = []               # [BucketResult], layout worker only
+        self.remaining = 0              # buckets not yet laid out
+        self.waits = {}                 # request -> explore queue wait (s)
+
+
 class DesignService:
     """Queue-backed multi-tenant layer over a `DesignSession`."""
 
     def __init__(self, session: DesignSession | None = None, *,
-                 max_coalesce: int = 16, coalesce_window_s: float = 0.05):
+                 max_coalesce: int = 16, coalesce_window_s: float = 0.05,
+                 pipeline_depth: int = 2):
         if max_coalesce <= 0:
             raise ValueError("max_coalesce must be positive")
         if coalesce_window_s < 0:
             raise ValueError("coalesce_window_s must be >= 0")
+        if pipeline_depth <= 0:
+            raise ValueError("pipeline_depth must be positive")
         self.session = session or DesignSession()
         self.max_coalesce = max_coalesce
         self.coalesce_window_s = coalesce_window_s
+        # bound of the per-stage batch queues: how many coalesced batches
+        # may be in flight ahead of (and including) the explore stage —
+        # the pipeline's lookahead.  Bucket-granular queues are bounded
+        # at 4x so a many-bucket batch cannot balloon memory.
+        self.pipeline_depth = pipeline_depth
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)   # queue grew / closing
         self._done_cv = threading.Condition(self._lock)  # artifacts landed
-        # serializes session.run_many: the session's caches/stats are not
-        # thread-safe, and the run()/step()-vs-pump guards are advisory
-        # (unlocked liveness reads) — this lock is the hard guarantee that
-        # only one dispatch drives the session at a time
+        # serializes session access on the synchronous run()/step() path;
+        # the pipelined path instead relies on the stage partition of
+        # session state (module docstring) and refuses run()/step() while
+        # a pump is active
         self._dispatch = threading.Lock()
         self._queue: list[tuple[int, DesignRequest, float]] = []
         self._pending: set[int] = set()   # issued, not yet in `done`
         self._next_ticket = 0
         self.done: dict[int, DesignArtifact] = {}
         self._pump: threading.Thread | None = None
+        self._sync_dispatchers = 0   # run()/step() drains in progress
+        self._stage_threads: list[threading.Thread] = []
+        self._queues: dict[str, queue.Queue] = {}
+        self._inflight: list[_Batch] = []   # admitted, not yet finalized
+        self._pipelined = False
         self._closing = False
         self._pump_error: BaseException | None = None
+        # occupancy clocks (under self._lock): when each stage went busy,
+        # cumulative busy seconds, and the explore∧layout overlap clock
+        self._busy_since: dict[str, float] = {}
+        self._busy_s: collections.Counter = collections.Counter()
+        self._overlap_since: float | None = None
+        self._overlap_s = 0.0
 
-    @property
-    def stats(self) -> collections.Counter:
-        return self.session.stats
+    # -- accounting ------------------------------------------------------
+    def stats(self) -> dict:
+        """A point-in-time **snapshot** of counters and pipeline gauges.
+
+        Returns a fresh dict each call (taken under the service lock) —
+        mutating it cannot corrupt the service, unlike the live Counter
+        view this used to be.  Counter keys come from the session
+        (`explorer_dispatches`, `layout_dispatches`, cache hits/misses,
+        `service_batches`/`service_batch_requests`, ...); gauge keys:
+
+          * `queue_depth` — submissions not yet admitted to a batch;
+          * `inflight_batches` — admitted, not yet finalized;
+          * `done_count`, `pump_alive`, `pipelined`;
+          * `stage_queue_depth` / `stage_busy` / `stage_busy_s` — per
+            stage: items waiting, busy right now, cumulative busy time;
+          * `pipeline_overlap_s` — wall-clock during which the explore
+            and layout stages were busy *simultaneously*, and
+            `pipeline_overlap_fraction` — that, over the smaller of the
+            two stages' busy time (0.0 when either never ran).
+
+        The snapshot is a `collections.Counter` copy, so counter keys
+        that never fired read as 0 instead of raising."""
+        with self._lock:
+            now = time.monotonic()
+            snap = collections.Counter(self.session.stats)
+            snap["queue_depth"] = len(self._queue)
+            snap["inflight_batches"] = len(self._inflight)
+            snap["done_count"] = len(self.done)
+            snap["pump_alive"] = self._pump_alive()
+            snap["pipelined"] = self._pipelined
+            snap["stage_queue_depth"] = {
+                s: (self._queues[s].qsize() if s in self._queues else 0)
+                for s in _STAGES}
+            snap["stage_busy"] = {s: s in self._busy_since for s in _STAGES}
+            busy_s = {s: self._busy_s[s]
+                      + (now - self._busy_since[s]
+                         if s in self._busy_since else 0.0)
+                      for s in _STAGES}
+            snap["stage_busy_s"] = busy_s
+            overlap = self._overlap_s + (now - self._overlap_since
+                                         if self._overlap_since is not None
+                                         else 0.0)
+            snap["pipeline_overlap_s"] = overlap
+            floor = min(busy_s["explore"], busy_s["layout"])
+            snap["pipeline_overlap_fraction"] = (overlap / floor
+                                                 if floor > 0 else 0.0)
+            return snap
 
     def __len__(self) -> int:
         with self._lock:
@@ -117,12 +210,13 @@ class DesignService:
                 raise RuntimeError("DesignService is closing; "
                                    "no new submissions accepted")
             if self._pump_error is not None:
-                # nothing will serve this ticket: the pump died.  Refuse
-                # admission until close() surfaces (and clears) the error.
+                # nothing will serve this ticket: the pipeline stopped.
+                # Refuse admission until close() surfaces (and clears)
+                # the error.
                 raise RuntimeError(
                     "DesignService serve() pump failed; call close() to "
-                    "surface the error (its batch was restored to the "
-                    "queue), then serve() or run() again"
+                    "surface the error (in-flight batches are restored to "
+                    "the queue), then serve() or run() again"
                 ) from self._pump_error
             ticket = self._next_ticket
             self._next_ticket += 1
@@ -142,13 +236,30 @@ class DesignService:
         On an unexpected exception the batch is restored — in order, at
         the front of the queue — so no tenant's submission is lost.
 
-        Not valid while a `serve()` pump is running: the underlying
-        session is not thread-safe, so only one dispatcher may drive it."""
-        if self._pump_alive():
-            raise RuntimeError("step() while the serve() pump is active; "
-                               "the pump is the only dispatcher — use "
-                               "collect()/poll() instead")
-        return self._dispatch_once()
+        Not valid while a `serve()` pump is running: the pump's stage
+        workers are the only dispatchers — use `collect()`/`poll()`."""
+        self._begin_sync("step")
+        try:
+            return self._dispatch_once()
+        finally:
+            self._end_sync()
+
+    def _begin_sync(self, name: str) -> None:
+        """Claim the session for a synchronous run()/step() drain.  Taken
+        under the lock so the serve()-vs-sync mutual exclusion is not a
+        check-then-act race: serve() refuses while a drain is active,
+        and a drain refuses while a pump is alive."""
+        with self._lock:
+            if self._pump_alive():
+                raise RuntimeError(f"{name}() while the serve() pump is "
+                                   f"active; the pump is the only "
+                                   f"dispatcher — use collect()/poll() "
+                                   f"instead")
+            self._sync_dispatchers += 1
+
+    def _end_sync(self) -> None:
+        with self._lock:
+            self._sync_dispatchers -= 1
 
     def _dispatch_once(self) -> dict[int, DesignArtifact]:
         with self._lock:
@@ -170,8 +281,8 @@ class DesignService:
         with self._lock:
             self.done.update(out)
             self._pending.difference_update(out)
-            self.stats["service_batches"] += 1
-            self.stats["service_batch_requests"] += len(out)
+            self.session.stats["service_batches"] += 1
+            self.session.stats["service_batch_requests"] += len(out)
             self._done_cv.notify_all()
         return out
 
@@ -179,11 +290,12 @@ class DesignService:
         """Drain the whole queue synchronously; returns a snapshot of every
         completed (uncollected) ticket.  Not valid while a `serve()` pump
         is running — use `collect()`/`poll()` there."""
-        if self._pump_alive():
-            raise RuntimeError("run() while the serve() pump is active; "
-                               "use collect()/poll() instead")
-        while self._dispatch_once():
-            pass
+        self._begin_sync("run")
+        try:
+            while self._dispatch_once():
+                pass
+        finally:
+            self._end_sync()
         with self._lock:
             return dict(self.done)
 
@@ -202,7 +314,7 @@ class DesignService:
         """Non-blocking, non-destructive readiness probe: the artifact if
         ready, `None` while the ticket is still queued / in flight.
         Raises `UnknownTicket` for a ticket this service never issued, and
-        (like `collect`) surfaces a dead pump as `RuntimeError` — a
+        (like `collect`) surfaces a dead pipeline as `RuntimeError` — a
         poll-only consumer must not spin forever on a ticket that nothing
         is going to serve."""
         with self._lock:
@@ -211,8 +323,8 @@ class DesignService:
             if art is None and self._pump_error is not None:
                 raise RuntimeError(
                     f"ticket {ticket} cannot complete: the serve() pump "
-                    f"failed (its batch was restored to the queue; drain "
-                    f"with run()/step() or serve() again)"
+                    f"failed (close() restores in-flight batches to the "
+                    f"queue; drain with run()/step() or serve() again)"
                 ) from self._pump_error
             return art
 
@@ -222,10 +334,11 @@ class DesignService:
 
         With a `serve()` pump running — or a `timeout` given — blocks
         until the artifact lands, the timeout expires (`PendingTicket`),
-        or the pump fails (`RuntimeError` chaining the pump's exception;
-        the batch was restored to the queue).  Without a pump and without
-        a timeout, a still-pending ticket raises `PendingTicket`
-        immediately instead of deadlocking — drain with `run()`/`step()`.
+        or the pipeline fails (`RuntimeError` chaining the stage's
+        exception; `close()` restores the in-flight batches).  Without a
+        pump and without a timeout, a still-pending ticket raises
+        `PendingTicket` immediately instead of deadlocking — drain with
+        `run()`/`step()`.
 
         Popping on collect keeps `done` bounded in a long-lived service;
         pass `keep_done=True` to leave the artifact collectable again."""
@@ -242,8 +355,8 @@ class DesignService:
                 if self._pump_error is not None:
                     raise RuntimeError(
                         f"ticket {ticket} cannot complete: the serve() pump "
-                        f"failed (its batch was restored to the queue; drain "
-                        f"with run()/step() or serve() again)"
+                        f"failed (close() restores in-flight batches to the "
+                        f"queue; drain with run()/step() or serve() again)"
                     ) from self._pump_error
                 if deadline is None and not self._pump_alive():
                     raise PendingTicket(
@@ -260,24 +373,68 @@ class DesignService:
                 self._done_cv.wait(timeout=0.1 if remaining is None
                                    else min(remaining, 0.1))
 
-    # -- async serve loop ------------------------------------------------
+    # -- the staged pipeline ---------------------------------------------
     def _pump_alive(self) -> bool:
+        # the pipeline is "alive" (able to complete tickets) while the
+        # admission pump runs OR any stage worker is still draining —
+        # during close() the pump exits first but finalize keeps landing
+        # artifacts, and collectors must not see a dead service then
         pump = self._pump
-        return pump is not None and pump.is_alive()
+        if pump is not None and pump.is_alive():
+            return True
+        return any(t.is_alive() for t in self._stage_threads)
 
-    def serve(self) -> "DesignService":
-        """Start the coalescing pump thread (idempotent); returns `self`
-        so `with DesignService(...).serve() as svc:` reads naturally."""
+    def serve(self, *, pipelined: bool = True) -> "DesignService":
+        """Start the serve pump (idempotent); returns `self` so
+        `with DesignService(...).serve() as svc:` reads naturally.
+
+        `pipelined=True` (default) starts the staged pipeline executor:
+        admission pump + explore/distill/layout/finalize workers over
+        bounded queues, overlapping consecutive batches and streaming
+        layout buckets.  `pipelined=False` is the serial pump (one
+        thread, one coalesced batch at a time through `run_many`) —
+        kept for comparison benchmarks and as a minimal fallback.
+
+        Idempotent for the same mode; asking for the *other* mode while
+        a pump is alive raises (close() first to switch)."""
         with self._lock:
             if self._pump_alive():
+                if pipelined != self._pipelined:
+                    mode = "pipelined" if self._pipelined else "serial"
+                    raise RuntimeError(
+                        f"serve(pipelined={pipelined}) while a {mode} pump "
+                        f"is already running; close() first to switch modes")
                 return self
             if self._closing:
                 # a concurrent close() is joining the old pump; starting a
                 # second one here would orphan that drain (and race two
-                # dispatchers on the non-thread-safe session)
+                # dispatchers on the session)
                 raise RuntimeError("serve() while close() is in progress; "
                                    "wait for close() to return")
+            if self._sync_dispatchers:
+                # the converse of the step()/run() refusal: a synchronous
+                # drain is mid-flight on the session, and the stage
+                # workers must not race it
+                raise RuntimeError("serve() while a run()/step() drain is "
+                                   "in progress; wait for it to return")
             self._pump_error = None
+            self._pipelined = pipelined
+            if pipelined:
+                d = self.pipeline_depth
+                self._queues = {"explore": queue.Queue(maxsize=d),
+                                "distill": queue.Queue(maxsize=d),
+                                "layout": queue.Queue(maxsize=4 * d),
+                                "finalize": queue.Queue(maxsize=4 * d)}
+                self._stage_threads = [
+                    threading.Thread(target=fn,
+                                     name=f"design-service-{stage}",
+                                     daemon=True)
+                    for stage, fn in (("explore", self._explore_worker),
+                                      ("distill", self._distill_worker),
+                                      ("layout", self._layout_worker),
+                                      ("finalize", self._finalize_worker))]
+                for t in self._stage_threads:
+                    t.start()
             self._pump = threading.Thread(target=self._pump_loop,
                                           name="design-service-pump",
                                           daemon=True)
@@ -285,10 +442,21 @@ class DesignService:
         return self
 
     def _pump_loop(self) -> None:
+        """Admission: wait out the coalescing window, then either hand the
+        batch to the explore queue (pipelined) or dispatch it inline
+        (serial)."""
+        pipelined = self._pipelined
         try:
             while True:
                 with self._lock:
                     while True:
+                        if self._pump_error is not None:
+                            # a stage failed: stop forming batches and
+                            # wait for close() to restore + surface
+                            if self._closing:
+                                return
+                            self._work.wait()
+                            continue
                         if self._closing:
                             if not self._queue:
                                 return          # graceful: queue drained
@@ -305,37 +473,204 @@ class DesignService:
                             self._work.wait(timeout=wait)
                         else:
                             self._work.wait()
-                self._dispatch_once()
-        except Exception as e:   # step() already restored the batch
+                if pipelined:
+                    self._admit_batch()
+                else:
+                    self._dispatch_once()
+        except Exception as e:   # serial path; _dispatch_once restored it
             with self._lock:
                 self._pump_error = e
                 self._done_cv.notify_all()
+        finally:
+            if pipelined:
+                # one sentinel, forwarded stage to stage, drains and
+                # stops the whole chain in order
+                self._queues["explore"].put(None)
+
+    def _admit_batch(self) -> None:
+        with self._lock:
+            entries = self._queue[:self.max_coalesce]
+            del self._queue[:self.max_coalesce]
+            if not entries:
+                return
+            batch = _Batch(entries)
+            self._inflight.append(batch)
+        # blocking put = backpressure: at most `pipeline_depth` batches
+        # queue ahead of the explore stage; never block under the lock
+        self._queues["explore"].put(batch)
+
+    @contextlib.contextmanager
+    def _stage(self, name: str):
+        """Occupancy bookkeeping around one unit of stage work."""
+        with self._lock:
+            self._mark(name, busy=True)
+        try:
+            yield
+        finally:
+            with self._lock:
+                self._mark(name, busy=False)
+
+    def _mark(self, name: str, *, busy: bool) -> None:
+        # lock held.  Maintains per-stage busy clocks and the
+        # explore∧layout overlap clock (the pipelining win is exactly the
+        # wall-clock both are busy at once).
+        now = time.monotonic()
+        if busy:
+            self._busy_since[name] = now
+        else:
+            self._busy_s[name] += now - self._busy_since.pop(name)
+        both = "explore" in self._busy_since and "layout" in self._busy_since
+        if both and self._overlap_since is None:
+            self._overlap_since = now
+        elif not both and self._overlap_since is not None:
+            self._overlap_s += now - self._overlap_since
+            self._overlap_since = None
+
+    def _stage_failure(self, exc: BaseException) -> None:
+        """First stage failure wins: stop the pipeline, wake everyone.
+        The in-flight batches (including the failing one) are restored to
+        the queue front by close()."""
+        with self._lock:
+            if self._pump_error is None:
+                self._pump_error = exc
+            self._work.notify_all()     # admission: stop forming batches
+            self._done_cv.notify_all()  # collectors: surface the error
+
+    def _explore_worker(self) -> None:
+        q_in, q_out = self._queues["explore"], self._queues["distill"]
+        while True:
+            batch = q_in.get()
+            if batch is None:
+                q_out.put(None)
+                return
+            if self._pump_error is not None:
+                continue   # skip; close() restores it from _inflight
+            try:
+                start = time.monotonic()
+                wait = start - batch.admitted_at
+                batch.waits = {r: wait for _, r, _ in batch.entries}
+                with self._stage("explore"):
+                    batch.explored = self.session.explore_stage(
+                        [r for _, r, _ in batch.entries])
+                q_out.put(batch)
+            except Exception as e:
+                self._stage_failure(e)
+
+    def _distill_worker(self) -> None:
+        q_in, q_out = self._queues["distill"], self._queues["layout"]
+        while True:
+            batch = q_in.get()
+            if batch is None:
+                q_out.put(None)
+                return
+            if self._pump_error is not None:
+                continue
+            try:
+                with self._stage("distill"):
+                    batch.distilled = self.session.distill_stage(
+                        batch.explored, strict=False)
+                batch.remaining = len(batch.distilled.buckets)
+                if not batch.distilled.buckets:
+                    q_out.put((batch, None, time.monotonic()))
+                else:
+                    # stream: every bucket is submitted to the layout
+                    # worker the moment it exists — bucket 1 of batch N
+                    # is routing while the rest are still enqueuing and
+                    # batch N+1 is exploring
+                    for bucket in batch.distilled.buckets:
+                        q_out.put((batch, bucket, time.monotonic()))
+            except Exception as e:
+                self._stage_failure(e)
+
+    def _layout_worker(self) -> None:
+        q_in, q_out = self._queues["layout"], self._queues["finalize"]
+        while True:
+            item = q_in.get()
+            if item is None:
+                q_out.put(None)
+                return
+            batch, bucket, t_enq = item
+            if self._pump_error is not None:
+                continue
+            try:
+                if bucket is None:           # no layout work in this batch
+                    q_out.put(batch)
+                    continue
+                wait = time.monotonic() - t_enq
+                with self._stage("layout"):
+                    res = self.session.layout_stage(bucket)
+                res.queue_wait_s = wait
+                batch.results.append(res)    # this worker only: no race
+                batch.remaining -= 1
+                if batch.remaining == 0:     # last bucket -> finalize
+                    q_out.put(batch)
+            except Exception as e:
+                self._stage_failure(e)
+
+    def _finalize_worker(self) -> None:
+        q_in = self._queues["finalize"]
+        while True:
+            batch = q_in.get()
+            if batch is None:
+                return
+            if self._pump_error is not None:
+                continue
+            try:
+                with self._stage("finalize"):
+                    arts = self.session.finalize_stage(
+                        batch.distilled, batch.results,
+                        waits=batch.waits, pipelined=True)
+                out = {t: arts[r] for t, r, _ in batch.entries}
+                with self._lock:
+                    self.done.update(out)
+                    self._pending.difference_update(out)
+                    self.session.stats["service_batches"] += 1
+                    self.session.stats["service_batch_requests"] += len(out)
+                    if batch in self._inflight:
+                        self._inflight.remove(batch)
+                    self._done_cv.notify_all()
+            except Exception as e:
+                self._stage_failure(e)
 
     def close(self) -> None:
-        """Graceful shutdown: stop admitting, let the pump drain the queue,
-        join it.  Idempotent; a no-op if `serve()` was never called.  If
-        the pump failed, the failing batch was restored to the queue
-        (tickets intact, in order) and the pump's exception is re-raised
-        here."""
+        """Graceful shutdown: stop admitting, drain every queued batch
+        through all stages, join the pump and the stage workers.
+        Idempotent; a no-op if `serve()` was never called.  If a stage
+        failed, every in-flight batch is restored to the queue front
+        (tickets intact, in admission order) and the stage's exception
+        is re-raised here."""
         with self._lock:
             pump = self._pump
+            workers = list(self._stage_threads)
             if pump is not None:
                 self._closing = True
             self._work.notify_all()
         if pump is not None:
             # keep self._pump set while joining: a concurrent collect()
-            # must still see a live pump (no spurious PendingTicket during
-            # the final drain), and a concurrent serve() must not start a
-            # second dispatcher (it sees _closing and refuses)
+            # must still see a live pipeline (no spurious PendingTicket
+            # during the final drain), and a concurrent serve() must not
+            # start a second dispatcher (it sees _closing and refuses)
             pump.join()
+            for t in workers:
+                t.join()
         with self._lock:
             if self._pump is pump:
                 self._pump = None
+                self._stage_threads = []
+                self._queues = {}
             self._closing = False
             err, self._pump_error = self._pump_error, None
+            if self._inflight:
+                # restore every non-finalized batch — in admission order,
+                # at the FRONT of the queue: no ticket lost or reordered
+                self._queue[:0] = [e for b in self._inflight
+                                   for e in b.entries]
+                self._inflight = []
+            self._busy_since = {}
+            self._overlap_since = None
         if err is not None:
             raise RuntimeError(
-                "serve() pump failed; queued tickets were restored — "
+                "serve() pump failed; in-flight tickets were restored — "
                 "drain with run()/step() or serve() again") from err
 
     def __enter__(self) -> "DesignService":

@@ -161,7 +161,7 @@ class TestDesignService:
         svc = DesignService()
         tickets = [svc.submit(r) for r in reqs]
         done = svc.run()
-        assert svc.stats["explorer_dispatches"] == 1
+        assert svc.stats()["explorer_dispatches"] == 1
         for r, t in zip(reqs, tickets):
             art = done[t]
             assert art.provenance.coalesced == 2
@@ -186,7 +186,7 @@ class TestDesignService:
         exact = {(art.request.coarse, art.request.capacity)
                  + _grid_sig(s, art.request.coarse)
                  for art in done.values() for s in art.pareto.specs}
-        assert svc.stats["layout_dispatches"] == len(buckets)
+        assert svc.stats()["layout_dispatches"] == len(buckets)
         # quantization merges exact shapes, never splits them
         assert len(buckets) <= len(exact) <= sum(
             len(a.pareto) for a in done.values())
@@ -196,7 +196,7 @@ class TestDesignService:
         for sd in range(2):
             svc.submit(_request(4096, seed=sd, layout=False))
         svc.run()
-        assert svc.stats["explorer_dispatches"] == 2
+        assert svc.stats()["explorer_dispatches"] == 2
 
     def test_poison_request_cannot_starve_the_batch(self):
         svc = DesignService()

@@ -21,6 +21,10 @@ from repro.serve.design_service import (DesignService, PendingTicket,
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
+# threaded serve()-loop tests deadlock rather than fail when broken;
+# bound each test (pytest-timeout in CI, the conftest watchdog otherwise)
+pytestmark = pytest.mark.timeout(900)
+
 # Same small budget as tests/test_design_api.py: the compiled sweep and
 # layout programs are shared process-wide, so these tests ride its jit
 # cache (and vice versa) instead of paying a fresh compile each.
@@ -60,8 +64,9 @@ class TestServeLoop:
         for r, a in zip(reqs, arts):
             assert a.summary() == sync_arts[r].summary()
         # the window actually merged the concurrent submissions
-        assert svc.stats["service_batches"] == 1
-        assert svc.stats["service_batch_requests"] == 2
+        stats = svc.stats()
+        assert stats["service_batches"] == 1
+        assert stats["service_batch_requests"] == 2
         assert arts[0].provenance.coalesced == 2
 
     def test_window_deadline_dispatches_partial_batch(self):
@@ -72,7 +77,7 @@ class TestServeLoop:
             t = svc.submit(_request(layout=False))
             art = svc.collect(t, timeout=600)
         assert art.ok
-        assert svc.stats["service_batches"] == 1
+        assert svc.stats()["service_batches"] == 1
 
     def test_full_batch_dispatches_before_window(self):
         # window is huge; hitting max_coalesce must dispatch immediately
@@ -84,7 +89,7 @@ class TestServeLoop:
             arts = [svc.collect(t, timeout=600) for t in tickets]
             assert time.monotonic() - t0 < 600
         assert all(a.ok for a in arts)
-        assert svc.stats["service_batches"] == 1
+        assert svc.stats()["service_batches"] == 1
 
     def test_concurrent_submit_during_active_pump(self):
         svc = DesignService(max_coalesce=8, coalesce_window_s=0.1)
@@ -167,12 +172,14 @@ class TestFailureRestore:
 
     def test_pump_failure_surfaces_and_tickets_survive(self, monkeypatch):
         svc = DesignService(coalesce_window_s=0.02)
-        real_run_many = svc.session.run_many
+        real_explore = svc.session.explore_stage
 
         def boom(*a, **kw):
             raise RuntimeError("injected pump failure")
 
-        monkeypatch.setattr(svc.session, "run_many", boom)
+        # explore_stage is shared by run_many AND the pipelined pump, so
+        # this poisons both dispatch paths uniformly
+        monkeypatch.setattr(svc.session, "explore_stage", boom)
         svc.serve()
         ticket = svc.submit(_request(layout=False))
         with pytest.raises(RuntimeError, match="pump failed"):
@@ -185,7 +192,7 @@ class TestFailureRestore:
             svc.close()
         # the ticket is back in the queue, pending — not lost
         assert svc.poll(ticket) is None
-        monkeypatch.setattr(svc.session, "run_many", real_run_many)
+        monkeypatch.setattr(svc.session, "explore_stage", real_explore)
         assert svc.run()[ticket].ok
 
 
@@ -254,7 +261,7 @@ class TestArtifactCache:
         cache = ArtifactCache(tmp_path)
         path = cache.put(laid_artifact)
         d = json.loads(path.read_text())
-        assert d["schema"] == 1
+        assert d["schema"] == 2
         d["schema"] = 999
         path.write_text(json.dumps(d))
         assert cache.get(laid_artifact.request) is None
@@ -318,6 +325,79 @@ class TestArtifactCache:
         assert not art.ok
         assert ses.stats["artifact_cache_writes"] == 0
         assert len(ses.artifact_cache) == 0
+
+
+# -- cache eviction (long-lived fleets) ------------------------------------
+
+def _variants(artifact, n):
+    """Distinct cache entries: same content under fresh request keys."""
+    return [dataclasses.replace(
+        artifact, request=dataclasses.replace(artifact.request,
+                                              seed=1000 + k))
+            for k in range(n)]
+
+
+class TestArtifactCacheEviction:
+    def test_max_entries_prunes_lru_on_put(self, tmp_path, laid_artifact):
+        cache = ArtifactCache(tmp_path, max_entries=2)
+        v = _variants(laid_artifact, 3)
+        for art in v:
+            cache.put(art)
+            time.sleep(0.02)   # distinct mtimes
+        assert len(cache) == 2
+        assert cache.stats["lru_evictions"] == 1
+        assert cache.stats["prunes"] == 3
+        # the oldest entry went; the newer two survive
+        assert cache.get(v[0].request) is None
+        assert cache.get(v[1].request) is not None
+        assert cache.get(v[2].request) is not None
+
+    def test_get_refreshes_lru_recency(self, tmp_path, laid_artifact):
+        cache = ArtifactCache(tmp_path, max_entries=2)
+        v = _variants(laid_artifact, 3)
+        cache.put(v[0])
+        time.sleep(0.02)
+        cache.put(v[1])
+        time.sleep(0.02)
+        assert cache.get(v[0].request) is not None   # touch: v[1] is now LRU
+        time.sleep(0.02)
+        cache.put(v[2])                              # prune drops v[1]
+        assert cache.get(v[1].request) is None
+        assert cache.get(v[0].request) is not None
+
+    def test_ttl_expires_old_entries(self, tmp_path, laid_artifact):
+        cache = ArtifactCache(tmp_path, ttl_s=60.0)
+        v = _variants(laid_artifact, 2)
+        path = cache.put(v[0])
+        stale = time.time() - 120.0
+        os.utime(path, (stale, stale))
+        cache.put(v[1])
+        assert cache.stats["ttl_evictions"] == 1
+        assert cache.get(v[0].request) is None
+        assert cache.get(v[1].request) is not None
+        assert len(cache) == 1
+
+    def test_fresh_put_never_self_evicts(self, tmp_path, laid_artifact):
+        cache = ArtifactCache(tmp_path, max_entries=1, ttl_s=3600.0)
+        v = _variants(laid_artifact, 2)
+        cache.put(v[0])
+        time.sleep(0.02)
+        cache.put(v[1])
+        assert cache.get(v[1].request) is not None
+        assert len(cache) == 1
+
+    def test_knob_validation(self, tmp_path):
+        with pytest.raises(ValueError, match="max_entries"):
+            ArtifactCache(tmp_path, max_entries=0)
+        with pytest.raises(ValueError, match="ttl_s"):
+            ArtifactCache(tmp_path, ttl_s=0)
+
+    def test_unbounded_cache_never_prunes(self, tmp_path, laid_artifact):
+        cache = ArtifactCache(tmp_path)
+        for art in _variants(laid_artifact, 3):
+            cache.put(art)
+        assert len(cache) == 3
+        assert cache.stats["prunes"] == 0
 
 
 # -- bounded grid-sig cache ----------------------------------------------

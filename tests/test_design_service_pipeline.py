@@ -1,0 +1,308 @@
+"""Staged pipeline executor (`DesignService.serve(pipelined=True)`):
+ticket-for-ticket equality with the sequential stages, bucket
+streaming / overlap gauges, drain-on-close, per-stage failure restore,
+and the `stats()` snapshot contract."""
+import dataclasses
+import threading
+import time
+
+import pytest
+
+from repro.api import DesignRequest, DesignSession, Requirements
+from repro.serve.design_service import DesignService
+
+# every test here runs threads; a pipeline bug deadlocks rather than
+# fails, so each test carries a hard deadline (pytest-timeout in CI,
+# the conftest watchdog otherwise)
+pytestmark = pytest.mark.timeout(600)
+
+# Same small budget as tests/test_design_api.py: these ride the shared
+# process-wide jit cache instead of paying fresh compiles.
+POP, GENS = 48, 10
+REQS = Requirements(min_tops=0.5, min_snr_db=10.0)
+
+
+def _request(array_size=4096, seed=0, **kw):
+    kw.setdefault("pop_size", POP)
+    kw.setdefault("generations", GENS)
+    return DesignRequest(array_size=array_size, seed=seed, **kw)
+
+
+# -- pipelined == sequential ---------------------------------------------
+
+class TestPipelinedEquality:
+    def test_pipelined_equals_sequential_stages(self):
+        # a mixed batch: laid-out tenants, a front-only tenant, and a
+        # poison tenant whose requirements remove everything
+        reqs = [_request(seed=0, requirements=REQS, layout=True),
+                _request(seed=1, requirements=REQS, layout=True),
+                _request(array_size=16384, layout=False),
+                _request(seed=2, requirements=Requirements(min_tops=1e9),
+                         layout=True)]
+        seq = DesignSession().run_many(reqs, strict=False)
+
+        svc = DesignService(coalesce_window_s=0.25)
+        with svc.serve():
+            tickets = [svc.submit(r) for r in reqs]
+            arts = [svc.collect(t, timeout=600) for t in tickets]
+        for r, a in zip(reqs, arts):
+            assert a.summary() == seq[r].summary()
+            assert a.ok == seq[r].ok
+            assert a.provenance.pipelined
+        assert not arts[3].ok and "removed every Pareto point" in arts[3].error
+
+    def test_concurrent_submits_multi_batch(self):
+        # max_coalesce=2 forces several batches in flight concurrently;
+        # every tenant must get its own request's artifact back
+        svc = DesignService(max_coalesce=2, coalesce_window_s=0.05)
+        seeds = list(range(6))
+        results, errors = {}, []
+
+        def tenant(sd):
+            try:
+                t = svc.submit(_request(seed=sd, requirements=REQS,
+                                        layout=True))
+                results[sd] = svc.collect(t, timeout=600)
+            except Exception as e:   # surfaced below
+                errors.append(e)
+
+        with svc.serve():
+            threads = [threading.Thread(target=tenant, args=(sd,))
+                       for sd in seeds]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        assert not errors
+        assert sorted(results) == seeds
+        assert {results[sd].request.seed for sd in seeds} == set(seeds)
+        seq = DesignSession().run_many(
+            [_request(seed=sd, requirements=REQS, layout=True)
+             for sd in seeds], strict=False)
+        for sd in seeds:
+            assert results[sd].summary() == seq[results[sd].request].summary()
+
+    def test_multi_batch_overlap_and_waits(self):
+        # one request per batch: batch N+1's explore overlaps batch N's
+        # layout, which the occupancy clocks must witness
+        svc = DesignService(max_coalesce=1)
+        with svc.serve():
+            tickets = [svc.submit(_request(seed=sd, requirements=REQS,
+                                           layout=True))
+                       for sd in (0, 1, 2)]
+            arts = [svc.collect(t, timeout=600) for t in tickets]
+            stats = svc.stats()
+        assert stats["service_batches"] == 3
+        busy = stats["stage_busy_s"]
+        assert busy["explore"] > 0 and busy["layout"] > 0
+        assert busy["distill"] >= 0 and busy["finalize"] > 0
+        assert stats["pipeline_overlap_s"] > 0
+        assert 0 < stats["pipeline_overlap_fraction"] <= 1.0
+        for a in arts:
+            assert a.provenance.pipelined
+            assert a.provenance.explore_wait_s >= 0.0
+            assert a.provenance.layout_wait_s >= 0.0
+        # later batches waited on the explore queue behind earlier ones
+        assert arts[-1].provenance.explore_wait_s > 0.0
+
+    def test_sequential_driver_reports_not_pipelined(self):
+        art = DesignSession().run(_request(requirements=REQS, layout=True))
+        assert not art.provenance.pipelined
+        assert art.provenance.explore_wait_s == 0.0
+        assert art.provenance.layout_wait_s == 0.0
+
+
+# -- lifecycle ------------------------------------------------------------
+
+class TestPipelineLifecycle:
+    def test_mid_pipeline_close_drains_all_tickets(self):
+        # close() immediately after a burst of submissions: the final
+        # drain must push every admitted AND still-queued batch through
+        # all four stages — no ticket lost
+        svc = DesignService(max_coalesce=1)
+        svc.serve()
+        tickets = [svc.submit(_request(seed=sd, layout=False))
+                   for sd in range(4)]
+        svc.close()
+        for t in tickets:
+            art = svc.poll(t)
+            assert art is not None and art.ok
+        assert len(svc) == 0
+
+    def test_front_only_requests_flow_through(self):
+        # zero layout buckets: the batch must still traverse the layout
+        # stage (as a no-op) and finalize in order
+        svc = DesignService(coalesce_window_s=0.05)
+        with svc.serve():
+            t = svc.submit(_request(layout=False))
+            art = svc.collect(t, timeout=600)
+        assert art.ok and art.layout_rows is None
+        assert art.provenance.layout_dispatches == 0
+        assert art.provenance.pipelined
+
+    def test_artifact_cache_hits_flow_through_pipeline(self, tmp_path):
+        req = _request(requirements=REQS, layout=True)
+        DesignSession(artifact_cache=tmp_path).run(req)   # fill the cache
+        svc = DesignService(DesignSession(artifact_cache=tmp_path))
+        with svc.serve():
+            t = svc.submit(req)
+            art = svc.collect(t, timeout=600)
+        assert art.provenance.served_from == "artifact_cache"
+        assert art.provenance.explorer_dispatches == 0
+        assert art.provenance.pipelined
+
+    def test_serial_pump_still_available(self):
+        svc = DesignService(coalesce_window_s=0.05)
+        with svc.serve(pipelined=False):
+            assert svc.serve(pipelined=False) is svc   # same mode: idempotent
+            with pytest.raises(RuntimeError, match="close\\(\\) first"):
+                svc.serve(pipelined=True)   # mode switch under a live pump
+            t = svc.submit(_request(layout=False))
+            art = svc.collect(t, timeout=600)
+        assert art.ok and not art.provenance.pipelined
+        stats = svc.stats()
+        assert not stats["pipelined"]
+        assert stats["pipeline_overlap_s"] == 0.0
+
+    def test_pipeline_depth_validation(self):
+        with pytest.raises(ValueError, match="pipeline_depth"):
+            DesignService(pipeline_depth=0)
+
+    def test_serve_refused_while_sync_drain_active(self):
+        # the converse of run()-refused-under-pump: a mid-flight
+        # run()/step() drain owns the session (simulated the same way
+        # test_submit_and_serve_refused_while_closing simulates close)
+        svc = DesignService()
+        svc._sync_dispatchers = 1
+        with pytest.raises(RuntimeError, match="run\\(\\)/step\\(\\) drain"):
+            svc.serve()
+        svc._sync_dispatchers = 0
+        with svc.serve():
+            pass
+
+
+# -- failure / restore ----------------------------------------------------
+
+class TestStageFailureRestore:
+    @pytest.mark.parametrize("stage", ["explore_stage", "distill_stage",
+                                       "layout_stage", "finalize_stage"])
+    def test_stage_failure_restores_batch_in_order(self, stage, monkeypatch):
+        svc = DesignService(coalesce_window_s=0.02)
+        real = getattr(svc.session, stage)
+
+        def boom(*a, **kw):
+            raise RuntimeError(f"injected {stage} failure")
+
+        monkeypatch.setattr(svc.session, stage, boom)
+        svc.serve()
+        tickets = [svc.submit(_request(seed=sd, requirements=REQS,
+                                       layout=True))
+                   for sd in (0, 1)]
+        with pytest.raises(RuntimeError, match="pump failed"):
+            svc.collect(tickets[0], timeout=600)
+        with pytest.raises(RuntimeError, match="restored"):
+            svc.close()
+        # tickets back in the queue — in order, still pending, not lost
+        assert [t for t, _, _ in svc._queue] == tickets
+        for t in tickets:
+            assert svc.poll(t) is None
+        monkeypatch.setattr(svc.session, stage, real)
+        done = svc.run()
+        assert all(done[t].ok for t in tickets)
+        assert [done[t].request.seed for t in tickets] == [0, 1]
+
+    def test_blocked_collector_woken_by_stage_failure(self, monkeypatch):
+        # the window is long, so the collector blocks BEFORE the batch
+        # dispatches; the stage failure must wake it with the error
+        svc = DesignService(max_coalesce=2, coalesce_window_s=30.0)
+
+        def boom(*a, **kw):
+            raise RuntimeError("injected explore failure")
+
+        monkeypatch.setattr(svc.session, "explore_stage", boom)
+        svc.serve()
+        ticket = svc.submit(_request(layout=False))
+        caught: list = []
+
+        def collector():
+            try:
+                svc.collect(ticket, timeout=600)
+            except RuntimeError as e:
+                caught.append(e)
+
+        th = threading.Thread(target=collector)
+        th.start()
+        time.sleep(0.2)            # collector is parked on the ticket
+        svc.submit(_request(seed=1, layout=False))   # fills the batch
+        th.join(timeout=60)
+        assert not th.is_alive()
+        assert caught and "pump failed" in str(caught[0])
+        with pytest.raises(RuntimeError, match="restored"):
+            svc.close()
+
+
+# -- stats() snapshot -----------------------------------------------------
+
+class TestStatsSnapshot:
+    def test_snapshot_is_isolated_and_gauged(self):
+        svc = DesignService()
+        t0 = svc.submit(_request(seed=0, layout=False))
+        svc.submit(_request(seed=1, layout=False))
+        before = svc.stats()
+        assert before["queue_depth"] == 2
+        assert before["done_count"] == 0
+        assert not before["pump_alive"]
+        # mutating the snapshot must not corrupt the service
+        before["explorer_dispatches"] = 10 ** 9
+        before["stage_busy_s"]["explore"] = -1.0
+        svc.run()
+        after = svc.stats()
+        assert after["queue_depth"] == 0
+        assert after["done_count"] == 2
+        assert after["explorer_dispatches"] < 10 ** 9
+        assert after["stage_busy_s"]["explore"] >= 0.0
+        assert set(after["stage_queue_depth"]) == {"explore", "distill",
+                                                   "layout", "finalize"}
+        svc.collect(t0)
+        assert svc.stats()["done_count"] == 1
+
+    def test_inflight_gauge_returns_to_zero(self):
+        svc = DesignService(coalesce_window_s=0.02)
+        with svc.serve():
+            t = svc.submit(_request(layout=False))
+            svc.collect(t, timeout=600)
+        stats = svc.stats()
+        assert stats["inflight_batches"] == 0
+        assert all(d == 0 for d in stats["stage_queue_depth"].values())
+
+
+# -- provenance schema ----------------------------------------------------
+
+class TestPipelineProvenance:
+    def test_waits_round_trip_through_json(self, tmp_path):
+        svc = DesignService(max_coalesce=1)
+        with svc.serve():
+            tickets = [svc.submit(_request(seed=sd, requirements=REQS,
+                                           layout=True))
+                       for sd in (0, 1)]
+            art = svc.collect(tickets[1], timeout=600)
+            svc.collect(tickets[0], timeout=600)
+        path = tmp_path / "artifact.json"
+        art.to_json(path)
+        from repro.api import DesignArtifact
+
+        back = DesignArtifact.from_json(path)
+        assert back.provenance == art.provenance
+        assert back.provenance.pipelined
+        assert back.provenance.explore_wait_s == art.provenance.explore_wait_s
+
+    def test_coalesced_batch_shares_explore_wait(self):
+        svc = DesignService(coalesce_window_s=0.2)
+        with svc.serve():
+            ta = svc.submit(_request(seed=0, layout=False))
+            tb = svc.submit(_request(seed=1, layout=False))
+            a = svc.collect(ta, timeout=600)
+            b = svc.collect(tb, timeout=600)
+        assert a.provenance.coalesced == b.provenance.coalesced == 2
+        # one batch -> one explore-queue wait, stamped on both tenants
+        assert a.provenance.explore_wait_s == b.provenance.explore_wait_s
