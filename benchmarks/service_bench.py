@@ -38,6 +38,24 @@ busy time — > 0 means the pipeline actually overlapped; the serial
 pump is structurally 0).  Artifacts are asserted ticket-for-ticket
 equal to the sequential baseline on both sides.
 
+A fifth scenario measures the **layout worker pool** on the same
+multi-batch workload: K=1 vs K=`POOL_WORKERS` layout workers over the
+streamed bucket queue, each fault-free and fault-injected (one `node`
+fault on a layout bucket — retried in place — and one `slow` fault —
+the straggler path: a pool sheds it to a peer via the watchdog, a
+single worker has to sit it out).  Recorded per column: wall, ticket
+p50/p95, bucket retries/failures, shed count.  `cpu_count` is recorded
+at the top level because worker *threads* only buy wall-clock on a
+multi-core host — on a 1-core container the fault-free K speedup is
+structurally ~1.0x and should be read as environment, not regression.
+
+A sixth **chaos** scenario drives the full fault-tolerance contract:
+a guarded service takes an injected layout-bucket kill plus a simulated
+preemption mid-run, drains what was admitted, journals the rest to the
+WAL beside the artifact cache; a fresh service over the same cache root
+replays the journal.  Every ticket must resolve across the two phases
+with artifacts equal to the fault-free sequential baseline.
+
 Compile counts come from the `nsga2.TRACE_COUNTS["run_cell"]` probe and
 the session dispatch counters.  Results land in `BENCH_service.json` at
 the repo root so future PRs have a perf trajectory.
@@ -50,9 +68,11 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import platform
 import random
+import tempfile
 import threading
 import time
 
@@ -61,7 +81,9 @@ import numpy as np
 
 from repro.api import DesignRequest, DesignSession, Requirements
 from repro.core import nsga2
-from repro.serve.design_service import DesignService
+from repro.runtime.fault_tolerance import (FailureInjector, PreemptionGuard,
+                                           StragglerMonitor)
+from repro.serve.design_service import DesignService, PendingTicket
 
 # Async-scenario knobs: arrivals are jittered uniformly inside the
 # jitter span, the pump's admit-until-deadline window is the window
@@ -71,6 +93,18 @@ from repro.serve.design_service import DesignService
 # coalescing_factor assertion.
 ASYNC_WINDOW_S, ASYNC_JITTER_S = 0.25, 0.15
 ASYNC_WINDOW_SMOKE_S, ASYNC_JITTER_SMOKE_S = 1.5, 0.3
+
+# Layout-pool scenario knobs: pool width, the shed bar (threshold x EMA
+# of a bucket's wall time), and the injected slow fault's sleep — long
+# enough to clear the bar once an EMA exists, short enough not to
+# dominate the single-worker column's wall.
+POOL_WORKERS = 4
+POOL_SHED_THRESHOLD = 4.0   # loose: CPU contention on few-core hosts
+#   stretches healthy concurrent buckets too; sheds of those are benign
+#   (first completion wins, duplicates cancel at pickup) but a
+#   hair-trigger bar would shed every bucket on a 1-core runner
+POOL_SLOW_S, POOL_SLOW_SMOKE_S = 30.0, 6.0   # must clear threshold x EMA
+#   by a margin: full-mode buckets run seconds each
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
@@ -140,12 +174,16 @@ def _async_serve(requests, *, window_s: float, jitter_s: float,
     return artifacts, service, wall, latencies
 
 
-def _staged(requests, *, pipelined: bool, timeout_s: float = 600.0):
+def _staged(requests, *, pipelined: bool, workers: int = 1,
+            injector=None, straggler=None, timeout_s: float = 600.0):
     """The multi-batch pipeline workload: every request is its own batch
     (`max_coalesce=1`), all submitted up front.  Under the staged
     executor, batch N+1's exploration overlaps batch N's layout; under
-    the serial pump each batch runs start-to-finish before the next."""
-    service = DesignService(max_coalesce=1)
+    the serial pump each batch runs start-to-finish before the next.
+    `workers`/`injector`/`straggler` parameterize the layout-pool and
+    fault-injected columns."""
+    service = DesignService(max_coalesce=1, layout_workers=workers,
+                            injector=injector, straggler=straggler)
     with service.serve(pipelined=pipelined):
         t0 = time.perf_counter()
         tickets = [service.submit(r) for r in requests]
@@ -156,6 +194,95 @@ def _staged(requests, *, pipelined: bool, timeout_s: float = 600.0):
         wall = time.perf_counter() - t0
         stats = service.stats()
     return artifacts, stats, wall, latencies
+
+
+def _pool_injector(smoke: bool) -> FailureInjector:
+    # one node fault on the second layout bucket dispatch (retried in
+    # place) and one slow fault on the fourth (shed to a peer when the
+    # pool is wider than one); indices that never dispatch simply don't
+    # fire, so the schedule is safe for any bucket count
+    return FailureInjector(
+        slow_seconds=POOL_SLOW_SMOKE_S if smoke else POOL_SLOW_S,
+        fail_at={"layout": [1, (3, "slow")]})
+
+
+def _pool_column(arts, stats, wall, lat, seq) -> dict:
+    return {
+        "wall_s": wall,
+        "ticket_p50_s": float(np.percentile(lat, 50)),
+        "ticket_p95_s": float(np.percentile(lat, 95)),
+        "layout_dispatches": int(stats["layout_dispatches"]),
+        "bucket_retries": int(stats["bucket_retries"]),
+        "bucket_failures": int(stats["bucket_failures"]),
+        "shed_buckets": int(stats["shed_buckets"]),
+        "shed_losses": int(stats["shed_losses"]),
+        "artifacts_equal": all(a.summary() == b.summary()
+                               for a, b in zip(seq, arts)),
+    }
+
+
+def _chaos(requests, baseline, *, timeout_s: float = 900.0) -> dict:
+    """Kill one layout bucket and preempt the service mid-run, then
+    restart.  Phase 1: a guarded service with an injected node fault on
+    the first layout bucket and a preemption request at the second
+    admission — it drains the already-admitted batches and journals
+    every unfinished ticket to the WAL beside the artifact cache.
+    Phase 2: a fresh service over the same cache root (the "restarted
+    process") replays the journal; drained work is served from disk.
+    Every ticket must resolve across the two phases with artifacts
+    equal to the fault-free sequential baseline."""
+    cache_dir = tempfile.mkdtemp(prefix="acim-chaos-cache-")
+    guard = PreemptionGuard()
+    injector = FailureInjector(
+        guard=guard, fail_at={"layout": [0], "admit": [(1, "preempt")]})
+    svc1 = DesignService(DesignSession(artifact_cache=cache_dir),
+                         max_coalesce=1, layout_workers=2,
+                         guard=guard, injector=injector)
+    drained = {}
+    t0 = time.perf_counter()
+    with svc1.serve():
+        tickets = [svc1.submit(r) for r in requests]
+        for r, t in zip(requests, tickets):
+            try:
+                drained[r] = svc1.collect(t, timeout=timeout_s)
+            except PendingTicket:
+                pass            # journaled: the replaying service owns it
+    drain_wall = time.perf_counter() - t0
+    s1 = svc1.stats()
+
+    svc2 = DesignService(DesignSession(artifact_cache=cache_dir),
+                         max_coalesce=1, layout_workers=2)
+    pending = svc2.journal.replay()    # peek; replay() does not clear
+    replayed = {}
+    t0 = time.perf_counter()
+    tickets2 = svc2.replay_journal()
+    with svc2.serve():
+        for r, t in zip(pending, tickets2):
+            replayed[r] = svc2.collect(t, timeout=timeout_s)
+    replay_wall = time.perf_counter() - t0
+    s2 = svc2.stats()
+
+    # in-flight tickets are journaled too (at-least-once WAL), so a
+    # request can resolve in both phases; the drained copy is canonical
+    arts = {**replayed, **drained}
+    resolved = [arts.get(r) for r in requests]
+    return {
+        "n_requests": len(requests),
+        "drain_wall_s": drain_wall,
+        "replay_wall_s": replay_wall,
+        "n_drained": len(drained),
+        "n_journaled": int(s1["journaled_tickets"]),
+        "n_replayed": len(tickets2),
+        "preemptions": int(s1["preemptions"]),
+        "bucket_retries": int(s1["bucket_retries"]),
+        # drained work that reached the cache before the "old process
+        # died" is served from disk on replay — convergence, not recompute
+        "replay_artifact_cache_hits": int(s2["artifact_cache_hits"]),
+        "replay_explorer_dispatches": int(s2["explorer_dispatches"]),
+        "all_resolved": all(a is not None and a.ok for a in resolved),
+        "artifacts_equal": all(a is not None and a.summary() == b.summary()
+                               for a, b in zip(resolved, baseline)),
+    }
 
 
 def _timed(fn, *args):
@@ -196,12 +323,26 @@ def run(smoke: bool = False) -> dict:
     srl, srl_stats, srl_wall, srl_lat = _staged(requests, pipelined=False)
     pipe, pipe_stats, pipe_wall, pipe_lat = _staged(requests, pipelined=True)
     busy = pipe_stats["stage_busy_s"]
+
+    # layout-pool scenario: K=1 fault-free is the pipelined run above
+    p4, p4_stats, p4_wall, p4_lat = _staged(
+        requests, pipelined=True, workers=POOL_WORKERS)
+    f1, f1_stats, f1_wall, f1_lat = _staged(
+        requests, pipelined=True, workers=1, injector=_pool_injector(smoke),
+        straggler=StragglerMonitor(threshold=POOL_SHED_THRESHOLD))
+    f4, f4_stats, f4_wall, f4_lat = _staged(
+        requests, pipelined=True, workers=POOL_WORKERS,
+        injector=_pool_injector(smoke),
+        straggler=StragglerMonitor(threshold=POOL_SHED_THRESHOLD))
+
+    chaos = _chaos(requests, seq)
     return {
         "n_requests": len(requests),
         "requests": [r.to_dict() for r in requests],
         "smoke": smoke,
         "backend": jax.default_backend(),
         "platform": platform.platform(),
+        "cpu_count": os.cpu_count(),
         "sequential": {"cold_s": seq_cold, "warm_s": seq_warm,
                        "run_cell_traces": seq_traces,
                        "explorer_dispatches": seq_dispatches},
@@ -253,6 +394,25 @@ def run(smoke: bool = False) -> dict:
                 float(np.percentile(pipe_lat, 95)
                       / np.percentile(srl_lat, 95)),
         },
+        "layout_pool": {
+            "workers": POOL_WORKERS,
+            "shed_threshold": POOL_SHED_THRESHOLD,
+            "slow_fault_s": POOL_SLOW_SMOKE_S if smoke else POOL_SLOW_S,
+            "fault_free": {
+                "k1": _pool_column(pipe, pipe_stats, pipe_wall,
+                                   pipe_lat, seq),
+                "k4": _pool_column(p4, p4_stats, p4_wall, p4_lat, seq),
+            },
+            "fault_injected": {
+                "k1": _pool_column(f1, f1_stats, f1_wall, f1_lat, seq),
+                "k4": _pool_column(f4, f4_stats, f4_wall, f4_lat, seq),
+            },
+            # thread-pool parallelism needs cores: read these against
+            # the top-level cpu_count (1-core hosts pin fault-free ~1.0x)
+            "wall_speedup_k4_vs_k1": pipe_wall / p4_wall,
+            "faulty_wall_speedup_k4_vs_k1": f1_wall / f4_wall,
+        },
+        "chaos": chaos,
     }
 
 
@@ -283,6 +443,23 @@ def main() -> None:
           f"p95={p['serial']['ticket_p95_s']:.3f}s) "
           f"overlap_fraction={p['overlap_fraction']:.2f} "
           f"artifacts_equal={p['artifacts_equal']}")
+    lp = result["layout_pool"]
+    ff, fi = lp["fault_free"], lp["fault_injected"]
+    print(f"layout pool (K={lp['workers']}, cpu_count="
+          f"{result['cpu_count']}): fault-free wall "
+          f"K1={ff['k1']['wall_s']:.3f}s K4={ff['k4']['wall_s']:.3f}s "
+          f"({lp['wall_speedup_k4_vs_k1']:.2f}x); fault-injected wall "
+          f"K1={fi['k1']['wall_s']:.3f}s K4={fi['k4']['wall_s']:.3f}s "
+          f"({lp['faulty_wall_speedup_k4_vs_k1']:.2f}x) "
+          f"retries={fi['k4']['bucket_retries']} "
+          f"shed={fi['k4']['shed_buckets']}")
+    c = result["chaos"]
+    print(f"chaos: drained {c['n_drained']}/{c['n_requests']} then "
+          f"journaled {c['n_journaled']}, replayed {c['n_replayed']} "
+          f"(cache hits {c['replay_artifact_cache_hits']}) "
+          f"retries={c['bucket_retries']} "
+          f"all_resolved={c['all_resolved']} "
+          f"artifacts_equal={c['artifacts_equal']}")
     print(f"speedup cold={result['coalesced_speedup_cold']:.2f}x "
           f"warm={result['coalesced_speedup_warm']:.2f}x "
           f"artifacts_equal={result['artifacts_equal']} -> {args.out}")

@@ -25,7 +25,7 @@ from repro.api.request import DesignRequest, Requirements
 from repro.api.session import (BucketResult, DesignArtifact, DesignSession,
                                DistilledBatch, ExploredBatch, LayoutBucket,
                                Provenance)
-from repro.api.artifact_cache import ArtifactCache
+from repro.api.artifact_cache import ArtifactCache, TicketJournal
 
 _DEFAULT_SESSION: DesignSession | None = None
 
@@ -40,5 +40,5 @@ def default_session() -> DesignSession:
 
 __all__ = ["DesignRequest", "Requirements", "DesignArtifact",
            "DesignSession", "Provenance", "ArtifactCache",
-           "ExploredBatch", "DistilledBatch", "LayoutBucket",
-           "BucketResult", "default_session"]
+           "TicketJournal", "ExploredBatch", "DistilledBatch",
+           "LayoutBucket", "BucketResult", "default_session"]

@@ -37,6 +37,17 @@ counts land in `stats["ttl_evictions"]` / `stats["lru_evictions"]`
 concurrency: two processes pruning the same directory both succeed
 (unlink errors are ignored), and a racing reader of an evicted entry
 just records a miss and recomputes.
+
+Beside the cache lives the **ticket journal** (`TicketJournal`, file
+`journal.jsonl` in the cache root): the preemption WAL of
+`repro.serve.design_service.DesignService`.  On SIGTERM the service
+drains its in-flight stages and writes every unfinished ticket's
+`DesignRequest` JSON — one line each, admission order preserved — via
+the same temp-file + `os.replace` atomicity as cache entries; a
+restarted service replays the journal (resubmitting the requests in
+order, artifacts re-stamped `served_from="journal_replay"`).  Drained
+work that reached the cache before the process died is served from
+disk on replay, so replay converges instead of recomputing the world.
 """
 from __future__ import annotations
 
@@ -44,10 +55,13 @@ import collections
 import json
 import os
 import pathlib
+import tempfile
 import time
 
 from repro.api.request import DesignRequest
 from repro.api.session import ARTIFACT_SCHEMA, DesignArtifact
+
+JOURNAL_NAME = "journal.jsonl"
 
 
 class ArtifactCache:
@@ -167,3 +181,91 @@ class ArtifactCache:
 
     def __repr__(self) -> str:
         return f"ArtifactCache(root={str(self.root)!r}, entries={len(self)})"
+
+
+class TicketJournal:
+    """Write-ahead log of unfinished `DesignRequest`s, for preemption.
+
+    One JSONL file: each line is `DesignRequest.to_json()`, in the
+    admission order of the tickets they came from.  `write()` replaces
+    the whole file atomically (temp file + `os.replace`) — the journal
+    is rewritten in full at each preemption drain, never appended, so a
+    reader can only ever observe a complete, consistent snapshot.
+    `replay()` returns the journaled requests in order and does NOT
+    clear the file — the replaying service clears it only after the
+    resubmitted tickets are safely back in its queue, so a crash
+    between read and resubmit loses nothing.  A corrupt line is
+    skipped and counted (`stats["rejects"]`), never raised: losing one
+    ticket's journal entry must not strand the rest.
+    """
+
+    def __init__(self, path) -> None:
+        self.path = pathlib.Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self.stats: collections.Counter = collections.Counter()
+
+    @classmethod
+    def beside(cls, cache: ArtifactCache) -> "TicketJournal":
+        """The journal co-located with an `ArtifactCache` (the layout a
+        restarted fleet worker looks for)."""
+        return cls(cache.root / JOURNAL_NAME)
+
+    def write(self, requests) -> int:
+        """Atomically replace the journal with `requests` (in order);
+        an empty sequence clears it.  Returns the entry count."""
+        requests = list(requests)
+        if not requests:
+            self.clear()
+            return 0
+        text = "".join(r.to_json() + "\n" for r in requests)
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name + ".",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(text)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self.stats["writes"] += 1
+        self.stats["journaled"] += len(requests)
+        return len(requests)
+
+    def replay(self) -> list[DesignRequest]:
+        """The journaled requests, admission order preserved; `[]` when
+        the journal is absent or empty.  Corrupt lines are counted
+        (`stats["rejects"]`) and skipped."""
+        try:
+            lines = self.path.read_text().splitlines()
+        except FileNotFoundError:
+            return []
+        out = []
+        for line in lines:
+            if not line.strip():
+                continue
+            try:
+                out.append(DesignRequest.from_json(line))
+            except (ValueError, KeyError, TypeError, json.JSONDecodeError):
+                self.stats["rejects"] += 1
+        self.stats["replays"] += 1
+        return out
+
+    def clear(self) -> None:
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+
+    def __len__(self) -> int:
+        try:
+            return sum(1 for line in self.path.read_text().splitlines()
+                       if line.strip())
+        except FileNotFoundError:
+            return 0
+
+    def __repr__(self) -> str:
+        return f"TicketJournal(path={str(self.path)!r}, entries={len(self)})"

@@ -77,7 +77,9 @@ from repro.eda.batched_flow import BatchedLayoutResult, iter_layout_buckets
 # new reader stale-layout JSON.  Bump on any to_dict/from_dict change.
 # 2: provenance gained the staged-pipeline fields (explore_wait_s,
 #    layout_wait_s, pipelined).
-ARTIFACT_SCHEMA = 2
+# 3: provenance gained the fault-tolerance fields (attempts,
+#    retried_buckets, shed_buckets, worker_id).
+ARTIFACT_SCHEMA = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +116,16 @@ class Provenance:
     explore_wait_s: float = 0.0
     layout_wait_s: float = 0.0
     pipelined: bool = False
+    # fault-tolerance facts (schema 3): total layout attempts across the
+    # buckets this request touched (>= bucket count when anything was
+    # retried; 0 for cache-served / front-only requests), how many of
+    # those buckets needed a retry, how many were shed to a peer layout
+    # worker by the straggler policy, and which layout worker completed
+    # the request's first bucket ("" outside the pipelined worker pool)
+    attempts: int = 0
+    retried_buckets: int = 0
+    shed_buckets: int = 0
+    worker_id: str = ""
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -286,6 +298,13 @@ class BucketResult:
     elapsed_s: float
     result: BatchedLayoutResult | None = None   # whole-request buckets only
     queue_wait_s: float = 0.0         # stamped by the pipelined executor
+    # fault-tolerance facts, stamped by the pipelined worker pool: which
+    # layout attempt produced this result (1 = first try), whether the
+    # bucket was shed to a peer worker mid-flight, and which worker
+    # completed it first
+    attempts: int = 1
+    shed: bool = False
+    worker_id: str = ""
 
 
 @dataclasses.dataclass
@@ -347,6 +366,11 @@ class DesignSession:
         self._programs: dict[tuple, _SweepProgram] = {}
         self._fronts: dict[tuple, ParetoResult] = {}
         self.stats: collections.Counter = collections.Counter()
+        # layout() may be driven by several pool workers at once (the
+        # service's layout worker pool); Counter increments are
+        # read-modify-write, so the concurrent writers serialize here.
+        # Single-writer stages (explore/distill/finalize) stay lock-free.
+        self.stats_lock = threading.Lock()
         if artifact_cache is not None and not hasattr(artifact_cache, "put"):
             from repro.api.artifact_cache import ArtifactCache
             artifact_cache = ArtifactCache(artifact_cache)
@@ -412,8 +436,11 @@ class DesignSession:
     # -- layout ----------------------------------------------------------
     def layout(self, specs, *, coarse: int = 64,
                capacity: int = 4) -> BatchedLayoutResult:
-        """One batched layout dispatch chain for a spec set."""
-        self.stats["layout_dispatches"] += 1
+        """One batched layout dispatch chain for a spec set.  Safe to
+        call from several layout-pool workers concurrently (the batched
+        flow is pure compute; the stats counter is locked)."""
+        with self.stats_lock:
+            self.stats["layout_dispatches"] += 1
         (res,) = iter_layout_buckets([(tuple(specs), coarse, capacity)])
         return res
 
@@ -443,7 +470,8 @@ class DesignSession:
                     explorer_dispatches=0, layout_dispatches=0,
                     front_cache_hit=False, coalesced=1,
                     explore_wait_s=0.0, layout_wait_s=0.0, pipelined=False,
-                    served_from="artifact_cache")
+                    attempts=0, retried_buckets=0, shed_buckets=0,
+                    worker_id="", served_from="artifact_cache")
                 served[r] = dataclasses.replace(hit, provenance=prov)
         remainder = [r for r in all_requests if r not in served]
         fronts, info = (self._fronts_for(remainder) if remainder
@@ -522,7 +550,8 @@ class DesignSession:
 
     def finalize_stage(self, batch: DistilledBatch,
                        bucket_results: Iterable[BucketResult], *,
-                       waits: dict | None = None, pipelined: bool = False
+                       waits: dict | None = None, pipelined: bool = False,
+                       failed: dict | None = None
                        ) -> dict[DesignRequest, DesignArtifact]:
         """Stage 4 — demux bucket rows back to per-request artifacts,
         stamp provenance (fair-share wall-clock, queue waits), and fill
@@ -530,10 +559,19 @@ class DesignSession:
 
         `waits` optionally maps request -> explore-queue wait seconds
         (the pipelined executor's measurement); layout queue waits ride
-        in on each `BucketResult.queue_wait_s`."""
+        in on each `BucketResult.queue_wait_s`.
+
+        `failed` maps bucket key -> `(message, attempts)` for buckets
+        whose layout exhausted the retry budget (the pipelined
+        executor's per-bucket isolation).  A request touching a failed
+        bucket completes with `artifact.error` set (its distilled front
+        is still attached; `layout_rows` is None) — batch-mates whose
+        buckets all succeeded finalize normally, and error artifacts
+        are never written to the persistent cache."""
         explored = batch.explored
         results = {br.bucket.key: br for br in bucket_results}
         waits = waits or {}
+        failed = failed or {}
         out: dict[DesignRequest, DesignArtifact] = {}
         for r, art in explored.served.items():
             if pipelined:
@@ -545,16 +583,27 @@ class DesignSession:
         for r in explored.requests:
             i = explored.info[r]
             keys = batch.spec_keys.get(r, ())
-            touched = [results[k] for k in dict.fromkeys(keys)]
+            uniq = list(dict.fromkeys(keys))
+            bad = [k for k in uniq if k in failed]
+            touched = [results[k] for k in uniq if k in results]
             layout_s = sum(results[k].elapsed_s / len(results[k].bucket.specs)
-                           for k in keys)
+                           for k in keys if k in results)
             layout_wait = (sum(br.queue_wait_s for br in touched)
                            / len(touched) if touched else 0.0)
             rows_for = (tuple(results[k].rows[s] for k, s
                               in zip(keys, batch.distilled[r].specs))
-                        if keys else None)
+                        if keys and not bad else None)
             layouts = next((br.result for br in touched
                             if br.bucket.request is r), None)
+            error = batch.errors.get(r)
+            if bad and error is None:
+                error = (f"{len(bad)} of {len(uniq)} layout bucket(s) "
+                         f"failed for request {r.sha()}: "
+                         + "; ".join(failed[k][0] for k in bad))
+            attempts = (sum(br.attempts for br in touched)
+                        + sum(failed[k][1] for k in bad))
+            retried = (sum(1 for br in touched if br.attempts > 1)
+                       + sum(1 for k in bad if failed[k][1] > 1))
             prov = Provenance(
                 request_sha=r.sha(), explore_s=i["explore_s"],
                 layout_s=layout_s,
@@ -566,17 +615,41 @@ class DesignSession:
                 served_from=("front_cache" if i["cache_hit"]
                              else "explorer"),
                 explore_wait_s=waits.get(r, 0.0),
-                layout_wait_s=layout_wait, pipelined=pipelined)
+                layout_wait_s=layout_wait, pipelined=pipelined,
+                attempts=attempts, retried_buckets=retried,
+                shed_buckets=sum(1 for br in touched if br.shed),
+                worker_id=(touched[0].worker_id if touched else ""))
             art = DesignArtifact(request=r, pareto=batch.distilled[r],
                                  layout_rows=rows_for,
                                  provenance=prov, layouts=layouts,
-                                 error=batch.errors.get(r))
+                                 error=error)
             if self.artifact_cache is not None and art.ok:
                 self.artifact_cache.put(art)
                 self.stats["artifact_cache_writes"] += 1
             out[r] = art
         self.stats["requests_served"] += len(out)
         return out
+
+    def error_artifact(self, request: DesignRequest, message: str, *,
+                       pipelined: bool = False,
+                       explore_wait_s: float = 0.0) -> DesignArtifact:
+        """A terminal failure artifact: an empty frontier, no layouts,
+        `error` set, `provenance.served_from == "error"`.  The pipelined
+        executor produces these when a whole batch stage (explore /
+        distill / finalize) exhausts its retry budget — the batch's
+        tickets complete with a diagnosis instead of poisoning the
+        pipeline.  Never written to the persistent cache (`art.ok` is
+        False)."""
+        prov = Provenance(
+            request_sha=request.sha(), explore_s=0.0, layout_s=0.0,
+            total_s=0.0, new_traces=0, explorer_dispatches=0,
+            layout_dispatches=0, front_cache_hit=False, coalesced=1,
+            served_from="error", explore_wait_s=explore_wait_s,
+            pipelined=pipelined)
+        return DesignArtifact(
+            request=request,
+            pareto=ParetoResult.from_rows(request.array_size, []),
+            layout_rows=None, provenance=prov, error=message)
 
     # -- the end-to-end drivers -------------------------------------------
     def run_many(self, requests: Iterable[DesignRequest], *,

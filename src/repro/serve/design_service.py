@@ -1,5 +1,5 @@
-"""Multi-tenant design service: a staged-pipeline, deadline-coalescing
-front door.
+"""Multi-tenant design service: a staged-pipeline, deadline-coalescing,
+fault-tolerant front door.
 
 The design-flow counterpart of `repro.serve.engine.ServeEngine`'s slot
 model: concurrent users `submit()` `DesignRequest`s and collect
@@ -12,11 +12,11 @@ across tenants.  Two driving modes share one queue:
     (`explore_sizes`, the benchmarks' cold/warm sweeps).
   * **staged pipeline** — `serve()` starts an admission pump with
     latency-bounded coalescing windows (dispatch at `max_coalesce`
-    queued OR `coalesce_window_s` past the oldest request) feeding four
-    stage workers over bounded queues:
+    queued OR `coalesce_window_s` past the oldest request) feeding the
+    stage workers over queues:
 
-        admission ─> explore ─> distill ─> layout ─> finalize
-                      (batch)    (batch)   (bucket)   (batch)
+        admission ─> explore ─> distill ─> layout pool ─> finalize
+                      (batch)    (batch)   (K x bucket)    (batch)
 
     Each stage runs the *same* `DesignSession` stage function the
     sequential `run_many` driver uses (`explore_stage`,
@@ -26,46 +26,101 @@ across tenants.  Two driving modes share one queue:
     `tests/test_design_service_pipeline.py`).  What the pipeline buys
     is **overlap**: batch N+1's exploration runs while batch N's layout
     buckets are still in flight, and layout buckets *stream* — the
-    distill worker submits each bucket to the layout worker the moment
-    it is formed, instead of blocking until the whole union is laid
-    out.  `serve(pipelined=False)` falls back to the PR-4 serial pump
-    (one thread, one coalesced batch at a time) for comparison —
+    distill worker submits each bucket the moment it is formed, and
+    `layout_workers=K` independent pool workers consume the bucket
+    queue concurrently (buckets are independent by construction, so the
+    layout bottleneck parallelizes; on a multi-core host K=4 is the
+    `BENCH_service.json` layout-pool scenario).  `serve(pipelined=
+    False)` falls back to the PR-4 serial pump (one thread, one
+    coalesced batch at a time through `run_many`) for comparison —
     `benchmarks/service_bench.py` records both.
 
 Stage-safety: the `DesignSession` is not thread-safe in general, but
 the stages partition its state — only the explore worker touches the
 program/front caches, only the distill worker forms buckets, only the
-layout worker dispatches layouts, only the finalize worker writes the
-artifact cache — and each `stats` counter key has a single writer
-stage.  `run()`/`step()` are refused while a pump is active so no
-second dispatcher can break that partition.
+finalize worker writes the artifact cache — and the one stage that
+*does* fan out, layout, calls only `session.layout_stage`, which is
+pure compute plus a locked counter (`session.stats_lock`).  Every
+other `stats` counter key has a single writer stage, or is incremented
+under the service lock.  `run()`/`step()` are refused while a pump is
+active so no second dispatcher can break that partition.
 
-Failure semantics: a request whose requirements remove every Pareto
-point completes with `artifact.error` set (non-strict mode) and cannot
-poison its batch.  An *unexpected* exception inside any stage stops
-the pipeline (first failure wins): it is surfaced to blocked
-`collect()` callers and re-raised from `close()`, and every in-flight
-batch is restored — in admission order, at the FRONT of the queue — so
-no ticket is lost or reordered.
+Failure semantics (the fault-tolerance contract, `docs/api.md`):
+
+  * **Per-bucket isolation** — a layout bucket that raises is retried
+    with capped exponential backoff + jitter
+    (`repro.runtime.fault_tolerance.capped_backoff`; knobs
+    `max_retries` / `retry_backoff_s` / `retry_backoff_cap_s` /
+    `retry_jitter`).  A bucket that exhausts the budget is recorded on
+    its batch, and at finalize only the tickets *touching* that bucket
+    complete with `artifact.error` — batch-mates whose specs landed in
+    healthy buckets get full artifacts.
+  * **Per-batch isolation** — an explore / distill / finalize failure
+    is retried on the same budget, then the batch's tickets complete
+    with `session.error_artifact` (`served_from="error"`) instead of
+    poisoning the pipeline.  Requests whose requirements remove every
+    Pareto point were already non-poisoning (non-strict distill).
+  * **Supervised workers** — each stage worker thread runs under
+    `repro.runtime.fault_tolerance.run_supervised` (`worker_restarts`
+    budget, backoff between restarts): a crash in the worker loop
+    *itself* re-queues the in-hand unit and restarts the loop in
+    process.  Only an exhausted restart budget stops the pipeline
+    (first failure wins): it is surfaced to blocked `collect()`
+    callers and re-raised from `close()`, and every in-flight batch is
+    restored — in admission order, at the FRONT of the queue — so no
+    ticket is lost or reordered.
+  * **Preemption** — with a `PreemptionGuard` attached (`guard=...`),
+    SIGTERM (or `guard.request()` in tests) makes the pump stop
+    admitting, journal every unfinished ticket's `DesignRequest` to
+    the WAL beside the artifact cache
+    (`repro.api.artifact_cache.TicketJournal`, admission order
+    preserved), and drain the already-admitted batches to completion.
+    A *fresh* service over the same cache root replays the journal on
+    `serve()` (or explicit `replay_journal()`): the requests are
+    resubmitted in order and their artifacts re-stamped
+    `served_from="journal_replay"` — drained work that reached the
+    artifact cache before the old process died is served from disk, so
+    replay converges instead of recomputing the world.
+  * **Straggler shedding** — with a `StragglerMonitor` attached
+    (`straggler=...`) and `layout_workers > 1`, a watchdog thread polls
+    the pool's in-flight buckets; one stuck past `threshold x EMA`
+    (`StragglerMonitor.stuck`) is re-queued to a peer worker.  First
+    completion wins; the loser is cancelled-on-observe (its result is
+    dropped when it finally returns — `shed_losses` in stats).
+
+    Every path above is deterministically testable without real
+    signals or flaky sleeps via `FailureInjector` (`injector=...`)
+    with a stage/unit-keyed schedule: `fail_at={"layout": [2]}` kills
+    the third layout bucket dispatch, kinds `node|slow|preempt`
+    (`tests/test_service_faults.py`).
 
 Accounting: `service.stats()` returns a point-in-time **snapshot** —
 session + service counters (`explorer_dispatches`,
 `layout_dispatches`, `run_cell_traces`, cache hits/misses, the
 `service_batches` / `service_batch_requests` pair whose ratio is the
-realized coalescing factor) plus live pipeline gauges (queue depths,
-per-stage occupancy and cumulative busy time, and the explore/layout
-overlap clock the benchmark's overlap fraction is computed from).
+realized coalescing factor, and the fault-tolerance counters
+`bucket_retries` / `bucket_failures` / `shed_buckets` / `shed_losses`
+/ `stage_worker_restarts` / `preemptions` / `journaled_tickets`) plus
+live pipeline gauges (queue depths, per-stage occupancy and cumulative
+busy time, and the explore/layout overlap clock the benchmark's
+overlap fraction is computed from).
 """
 from __future__ import annotations
 
 import collections
 import contextlib
+import dataclasses
 import queue
+import random
 import threading
 import time
 
+from repro.api.artifact_cache import TicketJournal
 from repro.api.request import DesignRequest
 from repro.api.session import DesignArtifact, DesignSession
+from repro.runtime.fault_tolerance import (FailureInjector, PreemptionGuard,
+                                           StragglerMonitor, capped_backoff,
+                                           run_supervised)
 
 _STAGES = ("explore", "distill", "layout", "finalize")
 
@@ -85,19 +140,32 @@ class PendingTicket(RuntimeError):
 
 
 class _Batch:
-    """One coalesced batch moving through the staged pipeline."""
+    """One coalesced batch moving through the staged pipeline.
+
+    The fault-isolation state rides on the batch: `failed` maps a
+    layout bucket key to its terminal `(message, attempts)` after the
+    retry budget, `completed`/`shed` implement first-completion-wins
+    for shed buckets, and `error` is the batch-level terminal message
+    (explore/distill/finalize exhausted their retries) that turns every
+    ticket into an `error_artifact`.  All mutated under the service
+    lock once the layout pool can see the batch."""
 
     __slots__ = ("entries", "admitted_at", "explored", "distilled",
-                 "results", "remaining", "waits")
+                 "results", "remaining", "waits", "failed", "completed",
+                 "shed", "error")
 
     def __init__(self, entries):
         self.entries = entries          # [(ticket, request, t_submit)]
         self.admitted_at = time.monotonic()
         self.explored = None            # ExploredBatch after explore
         self.distilled = None           # DistilledBatch after distill
-        self.results = []               # [BucketResult], layout worker only
-        self.remaining = 0              # buckets not yet laid out
+        self.results = []               # [BucketResult]
+        self.remaining = 0              # buckets not yet settled
         self.waits = {}                 # request -> explore queue wait (s)
+        self.failed = {}                # bucket key -> (message, attempts)
+        self.completed = set()          # bucket keys with a winning result
+        self.shed = set()               # bucket keys re-queued by watchdog
+        self.error = None               # batch-level terminal message
 
 
 class DesignService:
@@ -105,21 +173,55 @@ class DesignService:
 
     def __init__(self, session: DesignSession | None = None, *,
                  max_coalesce: int = 16, coalesce_window_s: float = 0.05,
-                 pipeline_depth: int = 2):
+                 pipeline_depth: int = 2, layout_workers: int = 1,
+                 max_retries: int = 2, retry_backoff_s: float = 0.05,
+                 retry_backoff_cap_s: float = 2.0,
+                 retry_jitter: float = 0.1, worker_restarts: int = 2,
+                 straggler: StragglerMonitor | None = None,
+                 guard: PreemptionGuard | None = None,
+                 journal: TicketJournal | str | None = None,
+                 injector: FailureInjector | None = None,
+                 sleep=time.sleep):
         if max_coalesce <= 0:
             raise ValueError("max_coalesce must be positive")
         if coalesce_window_s < 0:
             raise ValueError("coalesce_window_s must be >= 0")
         if pipeline_depth <= 0:
             raise ValueError("pipeline_depth must be positive")
+        if layout_workers <= 0:
+            raise ValueError("layout_workers must be positive")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
         self.session = session or DesignSession()
         self.max_coalesce = max_coalesce
         self.coalesce_window_s = coalesce_window_s
-        # bound of the per-stage batch queues: how many coalesced batches
-        # may be in flight ahead of (and including) the explore stage —
-        # the pipeline's lookahead.  Bucket-granular queues are bounded
-        # at 4x so a many-bucket batch cannot balloon memory.
+        # bound of the batch-granular explore/distill queues: how many
+        # coalesced batches may be in flight ahead of (and including)
+        # the explore stage — the pipeline's lookahead and the
+        # admission backpressure.  The bucket-granular layout queue and
+        # the finalize queue are UNBOUNDED: retries, shed duplicates,
+        # and crashed-worker re-queues put into them from inside the
+        # pool, and a bounded put there could deadlock the very workers
+        # that are supposed to drain it.
         self.pipeline_depth = pipeline_depth
+        self.layout_workers = layout_workers
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_backoff_cap_s = retry_backoff_cap_s
+        self.retry_jitter = retry_jitter
+        self.worker_restarts = worker_restarts
+        self._straggler = straggler
+        self._guard = guard
+        self._injector = injector
+        self._sleep = sleep
+        self._rng = random.Random(0xAC1)   # jitter; determinism for tests
+        if journal is None:
+            cache = getattr(self.session, "artifact_cache", None)
+            if cache is not None and hasattr(cache, "root"):
+                journal = TicketJournal.beside(cache)
+        elif not isinstance(journal, TicketJournal):
+            journal = TicketJournal(journal)
+        self.journal = journal
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)   # queue grew / closing
         self._done_cv = threading.Condition(self._lock)  # artifacts landed
@@ -136,12 +238,26 @@ class DesignService:
         self._sync_dispatchers = 0   # run()/step() drains in progress
         self._stage_threads: list[threading.Thread] = []
         self._queues: dict[str, queue.Queue] = {}
+        self._redo: dict[str, collections.deque] = {}  # crashed-worker units
         self._inflight: list[_Batch] = []   # admitted, not yet finalized
+        self._inflight_buckets: dict = {}   # worker id -> (batch, bucket,
+        #                                     started_at, attempt)
+        self._layout_live = 0        # pool workers yet to see the sentinel
+        self._bucket_seq = 0         # completed-bucket counter for the EMA
+        self._injector_units: collections.Counter = collections.Counter()
+        self._watchdog: threading.Thread | None = None
+        self._watchdog_stop = threading.Event()
+        self._watchdog_poll_s = 0.02
+        self._replayed: set[int] = set()   # tickets resubmitted from the WAL
+        self._preempted = False
         self._pipelined = False
         self._closing = False
         self._pump_error: BaseException | None = None
-        # occupancy clocks (under self._lock): when each stage went busy,
-        # cumulative busy seconds, and the explore∧layout overlap clock
+        # occupancy clocks (under self._lock): refcount + first-busy
+        # timestamp per stage (the layout clock is shared by the pool:
+        # busy while ANY pool worker is), cumulative busy seconds, and
+        # the explore∧layout overlap clock
+        self._busy_n: collections.Counter = collections.Counter()
         self._busy_since: dict[str, float] = {}
         self._busy_s: collections.Counter = collections.Counter()
         self._overlap_since: float | None = None
@@ -155,11 +271,14 @@ class DesignService:
         mutating it cannot corrupt the service, unlike the live Counter
         view this used to be.  Counter keys come from the session
         (`explorer_dispatches`, `layout_dispatches`, cache hits/misses,
-        `service_batches`/`service_batch_requests`, ...); gauge keys:
+        `service_batches`/`service_batch_requests`, the fault-tolerance
+        family listed in the module docstring, ...); gauge keys:
 
           * `queue_depth` — submissions not yet admitted to a batch;
           * `inflight_batches` — admitted, not yet finalized;
-          * `done_count`, `pump_alive`, `pipelined`;
+          * `inflight_buckets` — buckets running in the layout pool;
+          * `done_count`, `pump_alive`, `pipelined`, `layout_workers`,
+            `preempted`, `replayed_tickets`;
           * `stage_queue_depth` / `stage_busy` / `stage_busy_s` — per
             stage: items waiting, busy right now, cumulative busy time;
           * `pipeline_overlap_s` — wall-clock during which the explore
@@ -174,13 +293,17 @@ class DesignService:
             snap = collections.Counter(self.session.stats)
             snap["queue_depth"] = len(self._queue)
             snap["inflight_batches"] = len(self._inflight)
+            snap["inflight_buckets"] = len(self._inflight_buckets)
             snap["done_count"] = len(self.done)
             snap["pump_alive"] = self._pump_alive()
             snap["pipelined"] = self._pipelined
+            snap["layout_workers"] = self.layout_workers
+            snap["preempted"] = self._preempted
+            snap["replayed_tickets"] = len(self._replayed)
             snap["stage_queue_depth"] = {
                 s: (self._queues[s].qsize() if s in self._queues else 0)
                 for s in _STAGES}
-            snap["stage_busy"] = {s: s in self._busy_since for s in _STAGES}
+            snap["stage_busy"] = {s: self._busy_n[s] > 0 for s in _STAGES}
             busy_s = {s: self._busy_s[s]
                       + (now - self._busy_since[s]
                          if s in self._busy_since else 0.0)
@@ -209,6 +332,12 @@ class DesignService:
             if self._closing:
                 raise RuntimeError("DesignService is closing; "
                                    "no new submissions accepted")
+            if self._preempted:
+                raise RuntimeError(
+                    "DesignService was preempted; unfinished tickets are "
+                    "journaled — collect the drained artifacts, then replay "
+                    "the journal from a fresh service (serve() replays it "
+                    "automatically)")
             if self._pump_error is not None:
                 # nothing will serve this ticket: the pipeline stopped.
                 # Refuse admission until close() surfaces (and clears)
@@ -278,12 +407,7 @@ class DesignService:
                 self._work.notify_all()
             raise
         out = {ticket: artifacts[r] for ticket, r, _ in batch}
-        with self._lock:
-            self.done.update(out)
-            self._pending.difference_update(out)
-            self.session.stats["service_batches"] += 1
-            self.session.stats["service_batch_requests"] += len(out)
-            self._done_cv.notify_all()
+        self._complete(out)
         return out
 
     def run(self) -> dict[int, DesignArtifact]:
@@ -326,6 +450,10 @@ class DesignService:
                     f"failed (close() restores in-flight batches to the "
                     f"queue; drain with run()/step() or serve() again)"
                 ) from self._pump_error
+            if art is None and self._preempted and not self._pump_alive():
+                raise PendingTicket(
+                    f"ticket {ticket} was journaled by a preemption drain; "
+                    f"replay the journal from a fresh service")
             return art
 
     def collect(self, ticket: int, *, timeout: float | None = None,
@@ -338,7 +466,9 @@ class DesignService:
         exception; `close()` restores the in-flight batches).  Without a
         pump and without a timeout, a still-pending ticket raises
         `PendingTicket` immediately instead of deadlocking — drain with
-        `run()`/`step()`.
+        `run()`/`step()`.  A ticket journaled by a preemption drain
+        raises `PendingTicket` once the drain finishes: its artifact
+        belongs to the replaying service.
 
         Popping on collect keeps `done` bounded in a long-lived service;
         pass `keep_done=True` to leave the artifact collectable again."""
@@ -358,6 +488,10 @@ class DesignService:
                         f"failed (close() restores in-flight batches to the "
                         f"queue; drain with run()/step() or serve() again)"
                     ) from self._pump_error
+                if self._preempted and not self._pump_alive():
+                    raise PendingTicket(
+                        f"ticket {ticket} was journaled by a preemption "
+                        f"drain; replay the journal from a fresh service")
                 if deadline is None and not self._pump_alive():
                     raise PendingTicket(
                         f"ticket {ticket} is still pending and no serve() "
@@ -372,6 +506,65 @@ class DesignService:
                 # (or a run()-mode caller) cannot strand us
                 self._done_cv.wait(timeout=0.1 if remaining is None
                                    else min(remaining, 0.1))
+
+    def _complete(self, out: dict[int, DesignArtifact],
+                  batch: _Batch | None = None) -> None:
+        """Land a finished batch's artifacts: journal-replay re-stamp,
+        done/pending bookkeeping, service counters, wakeups."""
+        with self._lock:
+            for t in list(out):
+                if t in self._replayed:
+                    a = out[t]
+                    out[t] = dataclasses.replace(
+                        a, provenance=dataclasses.replace(
+                            a.provenance, served_from="journal_replay"))
+            self.done.update(out)
+            self._pending.difference_update(out)
+            self.session.stats["service_batches"] += 1
+            self.session.stats["service_batch_requests"] += len(out)
+            if batch is not None and batch in self._inflight:
+                self._inflight.remove(batch)
+            self._done_cv.notify_all()
+
+    # -- preemption + journal replay -------------------------------------
+    def replay_journal(self) -> list[int]:
+        """Resubmit every journaled request (admission order preserved)
+        and return their new tickets; their artifacts will be re-stamped
+        `served_from="journal_replay"`.  The journal is cleared only
+        AFTER the resubmissions are safely in the queue — a crash in
+        between replays again instead of losing tickets.  `serve()`
+        calls this automatically; explicit calls suit the synchronous
+        `run()` path.  No-op (`[]`) without a journal or with an empty
+        one."""
+        if self.journal is None:
+            return []
+        requests = self.journal.replay()
+        if not requests:
+            return []
+        tickets = [self.submit(r) for r in requests]
+        with self._lock:
+            self._replayed.update(tickets)
+        self.journal.clear()
+        return tickets
+
+    def _preempt_drain(self) -> None:
+        """The pump's reaction to `guard.preempted`: journal every
+        unfinished ticket (queued AND in-flight — if the drain itself is
+        killed, replay still recovers them; drained work is served from
+        the artifact cache on replay), stop admitting, and let the
+        already-admitted batches run to completion."""
+        with self._lock:
+            self._preempted = True
+            entries = sorted((e for b in self._inflight for e in b.entries),
+                             key=lambda e: e[0])
+            entries += self._queue   # queued-after-inflight, already ordered
+            self.session.stats["preemptions"] += 1
+        n = 0
+        if self.journal is not None and entries:
+            n = self.journal.write([r for _, r, _ in entries])
+        with self._lock:
+            self.session.stats["journaled_tickets"] += n
+            self._done_cv.notify_all()   # waiters re-evaluate (PendingTicket)
 
     # -- the staged pipeline ---------------------------------------------
     def _pump_alive(self) -> bool:
@@ -389,14 +582,17 @@ class DesignService:
         `with DesignService(...).serve() as svc:` reads naturally.
 
         `pipelined=True` (default) starts the staged pipeline executor:
-        admission pump + explore/distill/layout/finalize workers over
-        bounded queues, overlapping consecutive batches and streaming
-        layout buckets.  `pipelined=False` is the serial pump (one
-        thread, one coalesced batch at a time through `run_many`) —
-        kept for comparison benchmarks and as a minimal fallback.
+        admission pump + explore/distill/finalize workers and the
+        `layout_workers`-wide layout pool, overlapping consecutive
+        batches and streaming layout buckets.  `pipelined=False` is the
+        serial pump (one thread, one coalesced batch at a time through
+        `run_many`) — kept for comparison benchmarks and as a minimal
+        fallback.
 
         Idempotent for the same mode; asking for the *other* mode while
-        a pump is alive raises (close() first to switch)."""
+        a pump is alive raises (close() first to switch).  If a journal
+        holds tickets from a preempted predecessor, they are replayed
+        (resubmitted, in order) before this call returns."""
         with self._lock:
             if self._pump_alive():
                 if pipelined != self._pipelined:
@@ -417,45 +613,77 @@ class DesignService:
                 # workers must not race it
                 raise RuntimeError("serve() while a run()/step() drain is "
                                    "in progress; wait for it to return")
+            if self._guard is not None and self._guard.preempted:
+                raise RuntimeError(
+                    "serve() with a guard whose preemption is already "
+                    "requested; a preempted service stays drained — replay "
+                    "its journal from a fresh service (fresh guard)")
             self._pump_error = None
             self._pipelined = pipelined
             if pipelined:
                 d = self.pipeline_depth
                 self._queues = {"explore": queue.Queue(maxsize=d),
                                 "distill": queue.Queue(maxsize=d),
-                                "layout": queue.Queue(maxsize=4 * d),
-                                "finalize": queue.Queue(maxsize=4 * d)}
+                                "layout": queue.Queue(),    # unbounded: pool
+                                "finalize": queue.Queue()}  # retries re-put
+                self._redo = {s: collections.deque() for s in _STAGES}
+                self._layout_live = self.layout_workers
                 self._stage_threads = [
-                    threading.Thread(target=fn,
-                                     name=f"design-service-{stage}",
-                                     daemon=True)
-                    for stage, fn in (("explore", self._explore_worker),
-                                      ("distill", self._distill_worker),
-                                      ("layout", self._layout_worker),
-                                      ("finalize", self._finalize_worker))]
+                    threading.Thread(target=self._stage_worker,
+                                     args=("explore", None),
+                                     name="design-service-explore",
+                                     daemon=True),
+                    threading.Thread(target=self._stage_worker,
+                                     args=("distill", None),
+                                     name="design-service-distill",
+                                     daemon=True),
+                    *(threading.Thread(target=self._stage_worker,
+                                       args=("layout", w),
+                                       name=f"design-service-layout-{w}",
+                                       daemon=True)
+                      for w in range(self.layout_workers)),
+                    threading.Thread(target=self._stage_worker,
+                                     args=("finalize", None),
+                                     name="design-service-finalize",
+                                     daemon=True)]
                 for t in self._stage_threads:
                     t.start()
+                if self._straggler is not None and self.layout_workers > 1:
+                    self._watchdog_stop.clear()
+                    self._watchdog = threading.Thread(
+                        target=self._watchdog_loop,
+                        name="design-service-watchdog", daemon=True)
+                    self._watchdog.start()
             self._pump = threading.Thread(target=self._pump_loop,
                                           name="design-service-pump",
                                           daemon=True)
             self._pump.start()
+        self.replay_journal()
         return self
 
     def _pump_loop(self) -> None:
         """Admission: wait out the coalescing window, then either hand the
         batch to the explore queue (pipelined) or dispatch it inline
-        (serial)."""
+        (serial).  With a guard attached, waits are bounded so a
+        preemption request is noticed within ~0.1s even on an idle
+        queue."""
         pipelined = self._pipelined
+        cap = 0.1 if self._guard is not None else None
         try:
             while True:
+                preempt = False
                 with self._lock:
                     while True:
+                        if (self._guard is not None and self._guard.preempted
+                                and not self._preempted):
+                            preempt = True
+                            break
                         if self._pump_error is not None:
                             # a stage failed: stop forming batches and
                             # wait for close() to restore + surface
                             if self._closing:
                                 return
-                            self._work.wait()
+                            self._work.wait(timeout=0.1)
                             continue
                         if self._closing:
                             if not self._queue:
@@ -470,9 +698,13 @@ class DesignService:
                                     - (time.monotonic() - oldest))
                             if wait <= 0:
                                 break           # deadline of oldest request
-                            self._work.wait(timeout=wait)
+                            self._work.wait(timeout=wait if cap is None
+                                            else min(wait, cap))
                         else:
-                            self._work.wait()
+                            self._work.wait(timeout=cap)
+                if preempt:
+                    self._preempt_drain()
+                    return
                 if pipelined:
                     self._admit_batch()
                 else:
@@ -483,8 +715,9 @@ class DesignService:
                 self._done_cv.notify_all()
         finally:
             if pipelined:
-                # one sentinel, forwarded stage to stage, drains and
-                # stops the whole chain in order
+                # one sentinel, forwarded stage to stage (fanned out
+                # across the pool at layout), drains and stops the whole
+                # chain in order
                 self._queues["explore"].put(None)
 
     def _admit_batch(self) -> None:
@@ -495,6 +728,7 @@ class DesignService:
                 return
             batch = _Batch(entries)
             self._inflight.append(batch)
+        self._inject("admit")
         # blocking put = backpressure: at most `pipeline_depth` batches
         # queue ahead of the explore stage; never block under the lock
         self._queues["explore"].put(batch)
@@ -513,12 +747,18 @@ class DesignService:
     def _mark(self, name: str, *, busy: bool) -> None:
         # lock held.  Maintains per-stage busy clocks and the
         # explore∧layout overlap clock (the pipelining win is exactly the
-        # wall-clock both are busy at once).
+        # wall-clock both are busy at once).  Refcounted: the layout pool
+        # has K concurrent occupants of one clock — it runs from the
+        # first worker going busy to the last going idle.
         now = time.monotonic()
         if busy:
-            self._busy_since[name] = now
+            self._busy_n[name] += 1
+            if self._busy_n[name] == 1:
+                self._busy_since[name] = now
         else:
-            self._busy_s[name] += now - self._busy_since.pop(name)
+            self._busy_n[name] -= 1
+            if self._busy_n[name] == 0:
+                self._busy_s[name] += now - self._busy_since.pop(name)
         both = "explore" in self._busy_since and "layout" in self._busy_since
         if both and self._overlap_since is None:
             self._overlap_since = now
@@ -526,122 +766,305 @@ class DesignService:
             self._overlap_s += now - self._overlap_since
             self._overlap_since = None
 
-    def _stage_failure(self, exc: BaseException) -> None:
-        """First stage failure wins: stop the pipeline, wake everyone.
-        The in-flight batches (including the failing one) are restored to
-        the queue front by close()."""
+    def _fatal(self, exc: BaseException) -> None:
+        """Terminal pipeline failure (a worker exhausted its restart
+        budget): stop the pipeline, wake everyone.  The in-flight batches
+        are restored to the queue front by close()."""
         with self._lock:
             if self._pump_error is None:
                 self._pump_error = exc
             self._work.notify_all()     # admission: stop forming batches
             self._done_cv.notify_all()  # collectors: surface the error
 
-    def _explore_worker(self) -> None:
-        q_in, q_out = self._queues["explore"], self._queues["distill"]
+    def _inject(self, stage: str) -> None:
+        """Fire the failure injector for the next `stage` unit.  The unit
+        counter is monotonic per stage — a retried unit gets a NEW index,
+        so a scheduled injection fires exactly once.  Never called under
+        the lock: `slow` injections sleep."""
+        if self._injector is None:
+            return
+        with self._lock:
+            unit = self._injector_units[stage]
+            self._injector_units[stage] += 1
+        self._injector.fire(stage, unit)
+
+    def _attempt(self, stage: str, call):
+        """Run a batch-granular stage call under the retry budget:
+        `(value, None)` on success, `(None, message)` once the budget is
+        exhausted.  Backoff between attempts is capped-exponential with
+        jitter, through the injectable `sleep`."""
+        last: BaseException | None = None
+        for attempt in range(1, self.max_retries + 2):
+            try:
+                self._inject(stage)
+                return call(), None
+            except Exception as e:
+                last = e
+                with self._lock:
+                    if attempt <= self.max_retries:
+                        self.session.stats[f"{stage}_stage_retries"] += 1
+                    else:
+                        self.session.stats[f"{stage}_stage_failures"] += 1
+                if attempt <= self.max_retries:
+                    self._sleep(capped_backoff(
+                        attempt, base_s=self.retry_backoff_s,
+                        cap_s=self.retry_backoff_cap_s,
+                        jitter_frac=self.retry_jitter, rng=self._rng))
+        return None, (f"{stage} stage failed after {self.max_retries + 1} "
+                      f"attempt(s): {last!r}")
+
+    # -- supervised stage workers ----------------------------------------
+    def _stage_worker(self, stage: str, wid: int | None) -> None:
+        """Thread target: the stage loop under `run_supervised`.  A crash
+        inside the loop re-queues the in-hand unit (via the redo deque —
+        never a bounded-queue put, which could deadlock) and restarts the
+        loop in-process, with backoff, until `worker_restarts` is spent.
+        An exhausted budget is terminal: flag the pipeline down, then
+        keep consuming as a sink so upstream blocked puts and the
+        sentinel chain still drain (close() restores the batches)."""
+        q_in = self._queues[stage]
+
+        def attempt() -> int:
+            self._worker_loop(stage, wid)
+            return 0
+
+        def count_restart(n: int) -> None:
+            with self._lock:
+                self.session.stats["stage_worker_restarts"] += 1
+
+        try:
+            run_supervised(attempt, max_restarts=self.worker_restarts,
+                           restart_on=(Exception,),
+                           backoff_s=self.retry_backoff_s,
+                           backoff_cap_s=self.retry_backoff_cap_s,
+                           sleep=self._sleep, on_restart=count_restart)
+        except BaseException as e:
+            self._fatal(e)
+            while True:
+                item = q_in.get()
+                if item is None:
+                    self._propagate_sentinel(stage)
+                    return
+
+    def _worker_loop(self, stage: str, wid: int | None) -> None:
+        """One supervised incarnation of a stage worker: pull a unit
+        (crashed-in-hand units first), process it, repeat until the
+        sentinel."""
+        q_in, redo = self._queues[stage], self._redo[stage]
         while True:
-            batch = q_in.get()
-            if batch is None:
-                q_out.put(None)
+            try:
+                item = redo.popleft()
+            except IndexError:
+                item = q_in.get()
+            if item is None:
+                self._propagate_sentinel(stage)
                 return
             if self._pump_error is not None:
                 continue   # skip; close() restores it from _inflight
             try:
-                start = time.monotonic()
-                wait = start - batch.admitted_at
-                batch.waits = {r: wait for _, r, _ in batch.entries}
-                with self._stage("explore"):
-                    batch.explored = self.session.explore_stage(
-                        [r for _, r, _ in batch.entries])
-                q_out.put(batch)
-            except Exception as e:
-                self._stage_failure(e)
-
-    def _distill_worker(self) -> None:
-        q_in, q_out = self._queues["distill"], self._queues["layout"]
-        while True:
-            batch = q_in.get()
-            if batch is None:
-                q_out.put(None)
-                return
-            if self._pump_error is not None:
-                continue
-            try:
-                with self._stage("distill"):
-                    batch.distilled = self.session.distill_stage(
-                        batch.explored, strict=False)
-                batch.remaining = len(batch.distilled.buckets)
-                if not batch.distilled.buckets:
-                    q_out.put((batch, None, time.monotonic()))
+                if stage == "explore":
+                    self._process_explore(item)
+                elif stage == "distill":
+                    self._process_distill(item)
+                elif stage == "layout":
+                    self._process_layout(item, wid)
                 else:
-                    # stream: every bucket is submitted to the layout
-                    # worker the moment it exists — bucket 1 of batch N
-                    # is routing while the rest are still enqueuing and
-                    # batch N+1 is exploring
-                    for bucket in batch.distilled.buckets:
-                        q_out.put((batch, bucket, time.monotonic()))
-            except Exception as e:
-                self._stage_failure(e)
+                    self._process_finalize(item)
+            except Exception:
+                # the worker loop itself crashed (stage-call failures are
+                # already isolated inside the _process_* handlers): park
+                # the unit for the restarted incarnation and let the
+                # supervisor take it from here
+                redo.append(item)
+                raise
 
-    def _layout_worker(self) -> None:
-        q_in, q_out = self._queues["layout"], self._queues["finalize"]
-        while True:
-            item = q_in.get()
-            if item is None:
-                q_out.put(None)
-                return
-            batch, bucket, t_enq = item
-            if self._pump_error is not None:
-                continue
-            try:
-                if bucket is None:           # no layout work in this batch
-                    q_out.put(batch)
-                    continue
-                wait = time.monotonic() - t_enq
-                with self._stage("layout"):
-                    res = self.session.layout_stage(bucket)
-                res.queue_wait_s = wait
-                batch.results.append(res)    # this worker only: no race
-                batch.remaining -= 1
-                if batch.remaining == 0:     # last bucket -> finalize
-                    q_out.put(batch)
-            except Exception as e:
-                self._stage_failure(e)
+    def _propagate_sentinel(self, stage: str) -> None:
+        if stage == "explore":
+            self._queues["distill"].put(None)
+        elif stage == "distill":
+            for _ in range(self.layout_workers):   # one per pool worker
+                self._queues["layout"].put(None)
+        elif stage == "layout":
+            with self._lock:
+                self._layout_live -= 1
+                last = self._layout_live == 0
+            if last:
+                self._queues["finalize"].put(None)
 
-    def _finalize_worker(self) -> None:
-        q_in = self._queues["finalize"]
-        while True:
-            batch = q_in.get()
-            if batch is None:
+    def _process_explore(self, batch: _Batch) -> None:
+        start = time.monotonic()
+        wait = start - batch.admitted_at
+        batch.waits = {r: wait for _, r, _ in batch.entries}
+
+        def call():
+            with self._stage("explore"):
+                return self.session.explore_stage(
+                    [r for _, r, _ in batch.entries])
+
+        value, err = self._attempt("explore", call)
+        if err is not None:
+            batch.error = err
+        else:
+            batch.explored = value
+        self._queues["distill"].put(batch)
+
+    def _process_distill(self, batch: _Batch) -> None:
+        q_out = self._queues["layout"]
+        if batch.error is None:
+            def call():
+                with self._stage("distill"):
+                    return self.session.distill_stage(batch.explored,
+                                                      strict=False)
+            value, err = self._attempt("distill", call)
+            if err is not None:
+                batch.error = err
+            else:
+                batch.distilled = value
+        if batch.error is not None or not batch.distilled.buckets:
+            batch.remaining = 0
+            q_out.put((batch, None, time.monotonic(), 1))
+            return
+        batch.remaining = len(batch.distilled.buckets)
+        # stream: every bucket is submitted to the layout pool the
+        # moment it exists — bucket 1 of batch N is routing while the
+        # rest are still enqueuing and batch N+1 is exploring
+        for bucket in batch.distilled.buckets:
+            q_out.put((batch, bucket, time.monotonic(), 1))
+
+    def _process_layout(self, item, wid: int | None) -> None:
+        batch, bucket, t_enq, attempt = item
+        q_out = self._queues["finalize"]
+        if bucket is None:          # error batch / batch with no buckets
+            q_out.put(batch)
+            return
+        key = bucket.key
+        with self._lock:
+            if key in batch.completed or key in batch.failed:
+                # shed duplicate (or stale retry) of a settled bucket:
+                # cancelled-on-observe before it even dispatched
+                self.session.stats["bucket_cancellations"] += 1
                 return
-            if self._pump_error is not None:
-                continue
-            try:
+            self._inflight_buckets[wid] = (batch, bucket,
+                                           time.monotonic(), attempt)
+        wait = time.monotonic() - t_enq
+        t0 = time.monotonic()
+        try:
+            self._inject("layout")
+            with self._lock:
+                if key in batch.completed or key in batch.failed:
+                    # a shed peer settled it while a slow fault held us:
+                    # cancel-on-observe without paying the dispatch
+                    self._inflight_buckets.pop(wid, None)
+                    self.session.stats["shed_losses"] += 1
+                    return
+            with self._stage("layout"):
+                res = self.session.layout_stage(bucket)
+        except Exception as e:
+            done = False
+            with self._lock:
+                self._inflight_buckets.pop(wid, None)
+                if key in batch.completed or key in batch.failed:
+                    # a shed peer settled it while we were failing
+                    self.session.stats["bucket_cancellations"] += 1
+                    return
+                if attempt <= self.max_retries:
+                    self.session.stats["bucket_retries"] += 1
+                else:
+                    self.session.stats["bucket_failures"] += 1
+                    batch.failed[key] = (
+                        f"layout bucket {key} failed after {attempt} "
+                        f"attempt(s): {e!r}", attempt)
+                    batch.remaining -= 1
+                    done = batch.remaining == 0
+            if attempt <= self.max_retries:
+                self._sleep(capped_backoff(
+                    attempt, base_s=self.retry_backoff_s,
+                    cap_s=self.retry_backoff_cap_s,
+                    jitter_frac=self.retry_jitter, rng=self._rng))
+                self._queues["layout"].put((batch, bucket, t_enq,
+                                            attempt + 1))
+            elif done:
+                q_out.put(batch)
+            return
+        dt = time.monotonic() - t0
+        with self._lock:
+            self._inflight_buckets.pop(wid, None)
+            if key in batch.completed or key in batch.failed:
+                # first completion won already: we are the shed loser
+                self.session.stats["shed_losses"] += 1
+                return
+            batch.completed.add(key)
+            res.queue_wait_s = wait
+            res.attempts = attempt
+            res.shed = key in batch.shed
+            res.worker_id = f"layout-{wid}"
+            if self._straggler is not None:
+                self._straggler.observe(self._bucket_seq, dt)
+                self._bucket_seq += 1
+            batch.results.append(res)
+            batch.remaining -= 1
+            done = batch.remaining == 0
+        if done:                     # last bucket settled -> finalize
+            q_out.put(batch)
+
+    def _process_finalize(self, batch: _Batch) -> None:
+        if batch.error is None:
+            def call():
                 with self._stage("finalize"):
-                    arts = self.session.finalize_stage(
-                        batch.distilled, batch.results,
-                        waits=batch.waits, pipelined=True)
-                out = {t: arts[r] for t, r, _ in batch.entries}
-                with self._lock:
-                    self.done.update(out)
-                    self._pending.difference_update(out)
-                    self.session.stats["service_batches"] += 1
-                    self.session.stats["service_batch_requests"] += len(out)
-                    if batch in self._inflight:
-                        self._inflight.remove(batch)
-                    self._done_cv.notify_all()
-            except Exception as e:
-                self._stage_failure(e)
+                    return self.session.finalize_stage(
+                        batch.distilled, batch.results, waits=batch.waits,
+                        pipelined=True, failed=batch.failed or None)
+            arts, err = self._attempt("finalize", call)
+            if err is not None:
+                batch.error = err
+        if batch.error is not None:
+            with self._stage("finalize"):
+                arts = {r: self.session.error_artifact(
+                            r, batch.error, pipelined=True,
+                            explore_wait_s=batch.waits.get(r, 0.0))
+                        for _, r, _ in batch.entries}
+        out = {t: arts[r] for t, r, _ in batch.entries}
+        self._complete(out, batch)
+
+    # -- straggler shedding ----------------------------------------------
+    def _watchdog_loop(self) -> None:
+        """Poll the layout pool's in-flight buckets; one stuck past the
+        monitor's `threshold x EMA` is shed — re-queued so a peer worker
+        races the stuck incarnation, first completion wins."""
+        while not self._watchdog_stop.wait(self._watchdog_poll_s):
+            shed = []
+            with self._lock:
+                now = time.monotonic()
+                for rec in list(self._inflight_buckets.values()):
+                    batch, bucket, started, attempt = rec
+                    key = bucket.key
+                    if (key in batch.shed or key in batch.completed
+                            or key in batch.failed):
+                        continue   # one shed per bucket; settled is settled
+                    if self._straggler.stuck(now - started):
+                        batch.shed.add(key)
+                        self._straggler.events.append(
+                            ("shed", key, now - started,
+                             self._straggler.ema))
+                        self.session.stats["shed_buckets"] += 1
+                        shed.append((batch, bucket, started, attempt))
+            for item in shed:        # never put under the lock
+                self._queues["layout"].put(item)
 
     def close(self) -> None:
         """Graceful shutdown: stop admitting, drain every queued batch
-        through all stages, join the pump and the stage workers.
-        Idempotent; a no-op if `serve()` was never called.  If a stage
-        failed, every in-flight batch is restored to the queue front
-        (tickets intact, in admission order) and the stage's exception
-        is re-raised here."""
+        through all stages, join the pump, the stage workers, and the
+        shed watchdog.  Idempotent; a no-op if `serve()` was never
+        called.  If the pipeline failed terminally, every in-flight
+        batch is restored to the queue front (tickets intact, in
+        admission order) and the exception is re-raised here.  After a
+        preemption drain the journaled-but-unadmitted tickets stay in
+        the queue for inspection; the journal already holds them for
+        the replaying service."""
         with self._lock:
             pump = self._pump
             workers = list(self._stage_threads)
+            watchdog = self._watchdog
             if pump is not None:
                 self._closing = True
             self._work.notify_all()
@@ -653,11 +1076,17 @@ class DesignService:
             pump.join()
             for t in workers:
                 t.join()
+        if watchdog is not None:
+            self._watchdog_stop.set()
+            watchdog.join()
         with self._lock:
             if self._pump is pump:
                 self._pump = None
                 self._stage_threads = []
                 self._queues = {}
+                self._redo = {}
+                self._watchdog = None
+                self._inflight_buckets = {}
             self._closing = False
             err, self._pump_error = self._pump_error, None
             if self._inflight:
@@ -666,6 +1095,7 @@ class DesignService:
                 self._queue[:0] = [e for b in self._inflight
                                    for e in b.entries]
                 self._inflight = []
+            self._busy_n = collections.Counter()
             self._busy_since = {}
             self._overlap_since = None
         if err is not None:

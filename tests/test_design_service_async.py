@@ -177,10 +177,13 @@ class TestFailureRestore:
         def boom(*a, **kw):
             raise RuntimeError("injected pump failure")
 
-        # explore_stage is shared by run_many AND the pipelined pump, so
-        # this poisons both dispatch paths uniformly
+        # the SERIAL pump dispatches through run_many, where a stage
+        # exception is a whole-pump failure (the pipelined executor
+        # instead isolates it into error artifacts — see
+        # tests/test_service_faults.py); explore_stage is shared by
+        # run_many and the pipeline, so the later recovery drain works
         monkeypatch.setattr(svc.session, "explore_stage", boom)
-        svc.serve()
+        svc.serve(pipelined=False)
         ticket = svc.submit(_request(layout=False))
         with pytest.raises(RuntimeError, match="pump failed"):
             svc.collect(ticket, timeout=600)
@@ -261,7 +264,7 @@ class TestArtifactCache:
         cache = ArtifactCache(tmp_path)
         path = cache.put(laid_artifact)
         d = json.loads(path.read_text())
-        assert d["schema"] == 2
+        assert d["schema"] == 3
         d["schema"] = 999
         path.write_text(json.dumps(d))
         assert cache.get(laid_artifact.request) is None

@@ -1,7 +1,9 @@
 """Staged pipeline executor (`DesignService.serve(pipelined=True)`):
 ticket-for-ticket equality with the sequential stages, bucket
-streaming / overlap gauges, drain-on-close, per-stage failure restore,
-and the `stats()` snapshot contract."""
+streaming / overlap gauges, drain-on-close, per-stage failure
+isolation (error artifacts instead of a dead pipeline), preemption
+drain vs collect/close races, and the `stats()` snapshot contract.
+The full fault-injection matrix lives in `tests/test_service_faults.py`."""
 import dataclasses
 import threading
 import time
@@ -181,13 +183,18 @@ class TestPipelineLifecycle:
             pass
 
 
-# -- failure / restore ----------------------------------------------------
+# -- failure isolation ----------------------------------------------------
 
-class TestStageFailureRestore:
+class TestStageFailureIsolation:
     @pytest.mark.parametrize("stage", ["explore_stage", "distill_stage",
-                                       "layout_stage", "finalize_stage"])
-    def test_stage_failure_restores_batch_in_order(self, stage, monkeypatch):
-        svc = DesignService(coalesce_window_s=0.02)
+                                       "finalize_stage"])
+    def test_batch_stage_failure_isolates_to_error_artifacts(
+            self, stage, monkeypatch):
+        # an always-failing batch stage no longer kills the pipeline:
+        # after the retry budget the batch's tickets complete with
+        # error artifacts, and the pump stays alive for the next batch
+        svc = DesignService(coalesce_window_s=0.02, max_retries=0,
+                            retry_backoff_s=0.001)
         real = getattr(svc.session, stage)
 
         def boom(*a, **kw):
@@ -198,23 +205,44 @@ class TestStageFailureRestore:
         tickets = [svc.submit(_request(seed=sd, requirements=REQS,
                                        layout=True))
                    for sd in (0, 1)]
-        with pytest.raises(RuntimeError, match="pump failed"):
-            svc.collect(tickets[0], timeout=600)
-        with pytest.raises(RuntimeError, match="restored"):
-            svc.close()
-        # tickets back in the queue — in order, still pending, not lost
-        assert [t for t, _, _ in svc._queue] == tickets
-        for t in tickets:
-            assert svc.poll(t) is None
+        arts = [svc.collect(t, timeout=600) for t in tickets]
+        for a in arts:
+            assert not a.ok
+            assert f"injected {stage} failure" in a.error
+            assert a.provenance.served_from == "error"
+        # the pipeline survived: restore the stage, next batch is clean
         monkeypatch.setattr(svc.session, stage, real)
-        done = svc.run()
-        assert all(done[t].ok for t in tickets)
-        assert [done[t].request.seed for t in tickets] == [0, 1]
+        t2 = svc.submit(_request(seed=2, requirements=REQS, layout=True))
+        assert svc.collect(t2, timeout=600).ok
+        svc.close()   # clean close: no restore, no re-raise
+        assert len(svc) == 0
 
-    def test_blocked_collector_woken_by_stage_failure(self, monkeypatch):
+    def test_layout_failure_isolates_per_bucket(self, monkeypatch):
+        # layout failures are finer-grained still: only tickets touching
+        # the dead bucket(s) error out (here: all buckets die, so the
+        # laid-out tenant errors while its front survives on the artifact)
+        svc = DesignService(coalesce_window_s=0.02, max_retries=0,
+                            retry_backoff_s=0.001)
+
+        def boom(*a, **kw):
+            raise RuntimeError("injected layout failure")
+
+        monkeypatch.setattr(svc.session, "layout_stage", boom)
+        svc.serve()
+        ticket = svc.submit(_request(requirements=REQS, layout=True))
+        art = svc.collect(ticket, timeout=600)
+        assert not art.ok and "layout bucket" in art.error
+        assert art.pareto.specs          # distilled front still attached
+        assert art.layout_rows is None
+        assert svc.stats()["bucket_failures"] >= 1
+        svc.close()
+
+    def test_blocked_collector_woken_by_error_artifact(self, monkeypatch):
         # the window is long, so the collector blocks BEFORE the batch
-        # dispatches; the stage failure must wake it with the error
-        svc = DesignService(max_coalesce=2, coalesce_window_s=30.0)
+        # dispatches; the isolated failure must wake it with the error
+        # artifact (not strand it waiting for a dead pipeline)
+        svc = DesignService(max_coalesce=2, coalesce_window_s=30.0,
+                            max_retries=0, retry_backoff_s=0.001)
 
         def boom(*a, **kw):
             raise RuntimeError("injected explore failure")
@@ -222,13 +250,10 @@ class TestStageFailureRestore:
         monkeypatch.setattr(svc.session, "explore_stage", boom)
         svc.serve()
         ticket = svc.submit(_request(layout=False))
-        caught: list = []
+        got: list = []
 
         def collector():
-            try:
-                svc.collect(ticket, timeout=600)
-            except RuntimeError as e:
-                caught.append(e)
+            got.append(svc.collect(ticket, timeout=600))
 
         th = threading.Thread(target=collector)
         th.start()
@@ -236,9 +261,85 @@ class TestStageFailureRestore:
         svc.submit(_request(seed=1, layout=False))   # fills the batch
         th.join(timeout=60)
         assert not th.is_alive()
-        assert caught and "pump failed" in str(caught[0])
-        with pytest.raises(RuntimeError, match="restored"):
-            svc.close()
+        assert got and not got[0].ok
+        assert "injected explore failure" in got[0].error
+        svc.close()
+
+
+# -- preemption drain vs collect()/poll()/close() races --------------------
+
+class TestPreemptDrainRaces:
+    def test_collect_and_poll_raced_against_close_during_drain(
+            self, tmp_path):
+        # a preemption drain is in flight (slow explore keeps batches
+        # in the pipeline); close() races blocked collect(timeout=...)
+        # callers and a poll() spinner.  Contract: no deadlock, and
+        # every ticket resolves exactly one way — an artifact (drained)
+        # or PendingTicket (journaled for replay)
+        from repro.runtime.fault_tolerance import PreemptionGuard
+        from repro.serve.design_service import PendingTicket
+
+        guard = PreemptionGuard()
+        svc = DesignService(max_coalesce=1, pipeline_depth=1,
+                            coalesce_window_s=0.01, guard=guard,
+                            journal=tmp_path / "journal.jsonl")
+        real_explore = svc.session.explore_stage
+
+        def slow_explore(reqs):
+            time.sleep(0.3)        # hold batches in the pipeline
+            return real_explore(reqs)
+
+        svc.session.explore_stage = slow_explore
+        svc.serve()
+        tickets = [svc.submit(_request(seed=sd, layout=False))
+                   for sd in range(4)]
+        outcomes: dict[int, str] = {}
+        errors: list = []
+
+        def collector(t):
+            try:
+                svc.collect(t, timeout=120, keep_done=True)
+                outcomes[t] = "drained"
+            except PendingTicket:
+                outcomes[t] = "journaled"
+            except Exception as e:
+                errors.append((t, e))
+
+        def poller(t):
+            try:
+                while True:
+                    if svc.poll(t) is not None:
+                        outcomes[t] = "drained"
+                        return
+                    time.sleep(0.02)
+            except PendingTicket:
+                outcomes[t] = "journaled"
+            except Exception as e:
+                errors.append((t, e))
+
+        threads = [threading.Thread(target=collector, args=(t,))
+                   for t in tickets[:-1]]
+        threads.append(threading.Thread(target=poller,
+                                        args=(tickets[-1],)))
+        for th in threads:
+            th.start()
+        time.sleep(0.1)            # batch 0 is mid-explore
+        guard.request()            # preemption drain begins...
+        svc.close()                # ...and close() races it
+        for th in threads:
+            th.join(timeout=120)
+            assert not th.is_alive(), "collector/poller deadlocked"
+        assert not errors, errors
+        assert sorted(outcomes) == sorted(tickets)   # no ticket lost
+        assert "drained" in outcomes.values()        # batch 0 made it
+        drained = [t for t, o in outcomes.items() if o == "drained"]
+        for t in drained:          # drained artifacts are real and ok
+            assert svc.done[t].ok
+        journaled = [t for t, o in outcomes.items() if o == "journaled"]
+        # the WAL holds exactly the tickets that did not drain locally
+        # (plus any that drained after being journaled mid-flight)
+        assert len(svc.journal) >= len(journaled)
+        assert svc.stats()["preemptions"] == 1
 
 
 # -- stats() snapshot -----------------------------------------------------

@@ -89,6 +89,17 @@ class TestStraggler:
         plan = mon.mitigation_plan(n_hosts=4, slow_host=2)
         assert plan[2] != 2 and len(plan) == 4
 
+    def test_stuck_judges_inflight_without_mutating(self):
+        mon = StragglerMonitor(threshold=2.0)
+        assert not mon.stuck(1000.0)   # no EMA yet: no baseline to judge
+        for step in range(5):
+            mon.observe(step, 0.1)
+        ema = mon.ema
+        assert mon.stuck(0.5)          # 5x EMA, still in flight
+        assert not mon.stuck(0.15)
+        # unlike observe(), stuck() records nothing and moves nothing
+        assert mon.ema == ema and mon.events == []
+
 
 class TestElasticRemesh:
     def test_restore_under_different_sharding(self, tmp_path):
