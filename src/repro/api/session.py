@@ -79,7 +79,9 @@ from repro.eda.batched_flow import BatchedLayoutResult, iter_layout_buckets
 #    layout_wait_s, pipelined).
 # 3: provenance gained the fault-tolerance fields (attempts,
 #    retried_buckets, shed_buckets, worker_id).
-ARTIFACT_SCHEMA = 3
+# 4: provenance gained the routing-engine fields (route_engine,
+#    route_rounds, route_collisions).
+ARTIFACT_SCHEMA = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +128,16 @@ class Provenance:
     retried_buckets: int = 0
     shed_buckets: int = 0
     worker_id: str = ""
+    # routing-engine facts (schema 4), aggregated over the layout
+    # buckets this request touched: which wavefront scheduler routed
+    # them ("concurrent" = conflict-aware frontier batching, "scan" =
+    # one lax.scan dispatch per net slot; "" for cache-served /
+    # front-only requests), how many wavefront dispatch rounds they
+    # took in total, and how many buffered routes a capacity crossing
+    # invalidated and re-routed (the collision-retry count)
+    route_engine: str = ""
+    route_rounds: int = 0
+    route_collisions: int = 0
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -305,6 +317,11 @@ class BucketResult:
     attempts: int = 1
     shed: bool = False
     worker_id: str = ""
+    # routing facts from the bucket's `BatchedRouting`: which engine
+    # routed it and what it cost (rounds; collision-retries)
+    engine: str = ""
+    rounds: int = 0
+    collisions: int = 0
 
 
 @dataclasses.dataclass
@@ -434,14 +451,19 @@ class DesignSession:
         return fronts
 
     # -- layout ----------------------------------------------------------
-    def layout(self, specs, *, coarse: int = 64,
-               capacity: int = 4) -> BatchedLayoutResult:
+    def layout(self, specs, *, coarse: int = 64, capacity: int = 4,
+               engine: str | None = None) -> BatchedLayoutResult:
         """One batched layout dispatch chain for a spec set.  Safe to
         call from several layout-pool workers concurrently (the batched
-        flow is pure compute; the stats counter is locked)."""
+        flow is pure compute; the stats counter is locked).
+
+        `engine` passes through to `eda.batched_flow.batched_route`
+        ("concurrent" / "scan" / None for the backend auto choice); the
+        choice is recorded in the artifact provenance either way."""
         with self.stats_lock:
             self.stats["layout_dispatches"] += 1
-        (res,) = iter_layout_buckets([(tuple(specs), coarse, capacity)])
+        (res,) = iter_layout_buckets([(tuple(specs), coarse, capacity)],
+                                     engine=engine)
         return res
 
     # -- the four stages --------------------------------------------------
@@ -471,7 +493,8 @@ class DesignSession:
                     front_cache_hit=False, coalesced=1,
                     explore_wait_s=0.0, layout_wait_s=0.0, pipelined=False,
                     attempts=0, retried_buckets=0, shed_buckets=0,
-                    worker_id="", served_from="artifact_cache")
+                    worker_id="", route_engine="", route_rounds=0,
+                    route_collisions=0, served_from="artifact_cache")
                 served[r] = dataclasses.replace(hit, provenance=prov)
         remainder = [r for r in all_requests if r not in served]
         fronts, info = (self._fronts_for(remainder) if remainder
@@ -546,7 +569,10 @@ class DesignSession:
                             rows=dict(zip(res.specs, res.metrics_rows())),
                             elapsed_s=dt,
                             result=(res if bucket.request is not None
-                                    else None))
+                                    else None),
+                            engine=res.routing.engine,
+                            rounds=int(res.routing.rounds),
+                            collisions=int(res.routing.collisions))
 
     def finalize_stage(self, batch: DistilledBatch,
                        bucket_results: Iterable[BucketResult], *,
@@ -618,7 +644,11 @@ class DesignSession:
                 layout_wait_s=layout_wait, pipelined=pipelined,
                 attempts=attempts, retried_buckets=retried,
                 shed_buckets=sum(1 for br in touched if br.shed),
-                worker_id=(touched[0].worker_id if touched else ""))
+                worker_id=(touched[0].worker_id if touched else ""),
+                route_engine="/".join(sorted({br.engine for br in touched
+                                              if br.engine})),
+                route_rounds=sum(br.rounds for br in touched),
+                route_collisions=sum(br.collisions for br in touched))
             art = DesignArtifact(request=r, pareto=batch.distilled[r],
                                  layout_rows=rows_for,
                                  provenance=prov, layouts=layouts,

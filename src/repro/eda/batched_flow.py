@@ -41,6 +41,7 @@ unpack to the sequential dataclasses via `BatchedLayoutResult
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import NamedTuple
@@ -59,6 +60,8 @@ from repro.eda.placer import (CATEGORIES, CATEGORY_CELL, BatchDims,
                               geometry, layout_operands, rect_tensors)
 from repro.eda.router import NEIGHBORS, grid_shape
 from repro.kernels.maze_route import INF, wavefront_distance
+from repro.kernels.maze_route.frontier import (canvas_free, canvas_index,
+                                               expand_buckets, strides)
 
 Array = jax.Array
 
@@ -354,12 +357,372 @@ def _route_program(occ0: Array, nets: NetBatch, *, capacity: int,
     return occ, routed, failed, wirelen
 
 
+# ----------------------------------------------------------------------
+# Concurrent-net routing: conflict-aware scheduling over frontier buckets
+# ----------------------------------------------------------------------
+#
+# The scan engine above pays one full-grid wavefront per net *slot* —
+# O(nets) sweeps even though most nets never interact.  The concurrent
+# engine routes many nets of one spec in the same dispatch and keeps the
+# result bit-identical to the sequential router by separating *when a
+# field is computed* from *when its route commits*:
+#
+#   * rounds are colors of the conflict graph: each round greedily picks
+#     pending nets, in slot order, whose expanded bounding boxes are
+#     pairwise disjoint within a spec (greedy coloring — a net conflicts
+#     with an earlier pick, it waits for a later round);
+#   * the picked lanes' distance fields are computed together — closed
+#     form while the spec has no blocked cell (an obstacle-free
+#     rectangle's BFS field is plain Manhattan distance), the bucketed
+#     frontier engine (`kernels.maze_route.frontier`) with per-lane
+#     early exit afterwards;
+#   * routes commit strictly in slot order.  A commit that pushes cells
+#     *across* the capacity threshold (newly blocked cells X) is the
+#     only event that can perturb later fields, and a buffered field
+#     stays exact iff every target distance d0 satisfies
+#     d0 <= min over x in X of dist(x): blocking a cell at distance >=
+#     d0 cannot change any cell at distance < d0 (its shortest paths
+#     can't pass through x), cannot shrink the d0-1 match sets the
+#     backtrace reads, and leaves unreachable targets unreachable.
+#     Fields that fail the test are occupancy *collisions*: the loser is
+#     dropped and recomputed (retried) in a later round against the
+#     updated occupancy.
+#
+# The head of each spec's pending queue is always computed in the round
+# (no earlier pick exists to conflict with) and always commits (its
+# field is fresh), so every round makes progress and the loop terminates
+# in <= nets rounds; in practice rounds ~ conflict depth of the net set.
+
+
+@dataclasses.dataclass
+class RouteSchedule:
+    """Trace of the conflict-aware scheduler, for tests and the bench.
+
+    dispatches[r] = (spec, slot) lanes whose wavefronts were computed
+    together in round r; bboxes is every net's expanded bounding box
+    (y0, x0, y1, x1 inclusive, grid cells) so tests can assert no round
+    ever co-dispatched two overlapping nets of one spec."""
+
+    dispatches: list
+    bboxes: np.ndarray
+    rounds: int = 0
+    collisions: int = 0
+    crossings: int = 0
+
+
+@dataclasses.dataclass
+class _Buffered:
+    """A computed-but-not-yet-committed route of one (spec, slot) lane."""
+
+    cells: np.ndarray            # occupancy increments, real-grid flat idx
+    wl: int                      # wirelength contribution if committed
+    ok: bool                     # every valid target reachable
+    d0max: int                   # max finite target distance (-1: none)
+    dist: np.ndarray | None      # (C,) canvas field (frontier lanes)
+    hub: tuple | None            # (hy, hx): closed-form field (Manhattan)
+
+
+def _still_valid(e: _Buffered, ys: np.ndarray, xs: np.ndarray,
+                 stride: int) -> bool:
+    """Does `e`'s route survive cells (ys, xs) becoming blocked?
+
+    Exactness bound (see module comment): valid iff d0max <= min dist(x)
+    over the newly blocked cells.  Failed-net entries are always valid —
+    an unreachable target stays unreachable under more blocking, and
+    nothing else of theirs is ever read."""
+    if not e.ok or e.d0max < 0:
+        return True
+    if e.dist is not None:
+        dmin = int(e.dist[canvas_index(ys, xs, stride)].min())
+    else:
+        hy, hx = e.hub
+        dmin = int((np.abs(ys - hy) + np.abs(xs - hx)).min())
+    return e.d0max <= dmin
+
+
+def _ragged_arange(lengths: np.ndarray) -> np.ndarray:
+    """Concatenated [0..l) ranges: [0,1,..,l0-1, 0,1,..,l1-1, ...]."""
+    ends = np.cumsum(lengths)
+    return np.arange(int(ends[-1]) if len(ends) else 0) \
+        - np.repeat(ends - lengths, lengths)
+
+
+def _manhattan_paths(lane, hy, hx, ty, tx):
+    """Closed-form backtrace on an obstacle-free grid, all walkers at once.
+
+    On a blocked-free rectangle the field is |dy|+|dx| and the shared
+    tie-break (first `NEIGHBORS` entry at d-1: down, up, right, left)
+    walks vertically to the hub row, then horizontally — so the full
+    path (target included) is two ragged runs.  Returns concatenated
+    (lane, y, x) path cells, d0+1 of them per walker."""
+    sy = np.sign(hy - ty)
+    lv = np.abs(hy - ty) + 1            # vertical run, target included
+    sx = np.sign(hx - tx)
+    lh = np.abs(hx - tx)                # horizontal run, pivot excluded
+    ys_v = np.repeat(ty, lv) + np.repeat(sy, lv) * _ragged_arange(lv)
+    xs_v = np.repeat(tx, lv)
+    ys_h = np.repeat(hy, lh)
+    xs_h = np.repeat(tx + sx, lh) + np.repeat(sx, lh) * _ragged_arange(lh)
+    return (np.concatenate([np.repeat(lane, lv), np.repeat(lane, lh)]),
+            np.concatenate([ys_v, ys_h]), np.concatenate([xs_v, xs_h]))
+
+
+def _walk_paths(dist: np.ndarray, lanes, start, steps, stride: int):
+    """Vectorized multi-walker backtrace over canvas distance fields.
+
+    Every active walker takes its step simultaneously: 4 neighbour
+    gathers, first `NEIGHBORS` match at d-1 (the shared tie-break),
+    advance, emit.  Start cells are not emitted (callers emit target and
+    blocked-entry cells themselves).  Returns concatenated (lane,
+    canvas idx) of stepped-to cells."""
+    offs = strides(stride)
+    cur, d, who = start.copy(), steps.copy(), np.asarray(lanes).copy()
+    out_l: list[np.ndarray] = []
+    out_c: list[np.ndarray] = []
+    act = d > 0
+    cur, d, who = cur[act], d[act], who[act]
+    while d.size:
+        nbr = dist[who[:, None], cur[:, None] + offs[None, :]]
+        sel = np.argmax(nbr == (d - 1)[:, None], axis=1)
+        cur = cur + offs[sel]
+        out_l.append(who.copy())
+        out_c.append(cur.copy())
+        d = d - 1
+        act = d > 0
+        if not act.all():
+            cur, d, who = cur[act], d[act], who[act]
+    if not out_l:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int64))
+    return np.concatenate(out_l), np.concatenate(out_c)
+
+
+def _group_cells(lanes: np.ndarray, cells: np.ndarray, n_lanes: int):
+    """Split concatenated (lane, cell) emissions into per-lane arrays."""
+    order = np.argsort(lanes, kind="stable")
+    lanes, cells = lanes[order], cells[order]
+    bounds = np.searchsorted(lanes, np.arange(n_lanes + 1))
+    return [cells[bounds[k]:bounds[k + 1]] for k in range(n_lanes)]
+
+
+def _bbox_overlap(a, b) -> bool:
+    return bool(a[0] <= b[2] and b[0] <= a[2]
+                and a[1] <= b[3] and b[1] <= a[3])
+
+
+def _concurrent_route(nets: NetBatch, grids: np.ndarray, occ0: np.ndarray,
+                      *, capacity: int, record: bool = False):
+    """Route every net of every spec, conflict-aware (see section comment).
+
+    nets: numpy `NetBatch`; occ0: (B, Gh, Gw) int32 with out-of-grid
+    cells pre-blocked at `capacity`.  Returns (occ, routed, failed,
+    wirelength, rounds, collisions, schedule)."""
+    hubs, tgts = np.asarray(nets.hubs), np.asarray(nets.tgts)
+    tmask, nmask = np.asarray(nets.tmask), np.asarray(nets.nmask)
+    bsz = nmask.shape[0]
+    gh, gw = occ0.shape[1:]
+    stride = gw + 2
+    occ = occ0.copy()
+    occ_flat = occ.reshape(bsz, -1)
+    offs = strides(stride)
+
+    # Expanded bounding boxes: hub + valid targets, one-cell margin for
+    # the blocked-destination entry step.
+    py = np.concatenate([hubs[:, :, None, 0],
+                         np.where(tmask, tgts[..., 0], hubs[:, :, None, 0])],
+                        axis=2)
+    px = np.concatenate([hubs[:, :, None, 1],
+                         np.where(tmask, tgts[..., 1], hubs[:, :, None, 1])],
+                        axis=2)
+    bbox = np.stack([py.min(2) - 1, px.min(2) - 1,
+                     py.max(2) + 1, px.max(2) + 1], axis=-1)
+
+    pend = [collections.deque(np.nonzero(nmask[b])[0].tolist())
+            for b in range(bsz)]
+    # In-grid blocked cells per spec (normally grows from empty as
+    # commits cross capacity); Manhattan distance from a lane's hub to
+    # this set decides closed-form vs frontier expansion per lane.
+    blk_yx: list[list[np.ndarray]] = []
+    for b in range(bsz):
+        by, bx = np.nonzero(occ[b, :grids[b, 0], :grids[b, 1]] >= capacity)
+        blk_yx.append([by.astype(np.int64), bx.astype(np.int64)])
+    crossed = [bool(blk_yx[b][0].size) for b in range(bsz)]
+    routed = np.zeros(bsz, np.int32)
+    failed = np.zeros(bsz, np.int32)
+    wirelen = np.zeros(bsz, np.int32)
+    buffer: dict[tuple[int, int], _Buffered] = {}
+    schedule = RouteSchedule([], bbox) if record else None
+    rounds = collisions = crossings = 0
+
+    while any(pend):
+        rounds += 1
+        # ---- color: greedy bbox-disjoint picks over pending, slot order
+        man_lanes: list[tuple[int, int]] = []
+        bfs_lanes: list[tuple[int, int]] = []
+        for b in range(bsz):
+            chosen: list[np.ndarray] = []
+            picked: list[tuple[int, int]] = []
+            for s in pend[b]:
+                if (b, s) in buffer:
+                    continue
+                bb = bbox[b, s]
+                if any(_bbox_overlap(bb, c) for c in chosen):
+                    # Slots past a conflict cannot commit this round
+                    # (commits are in slot order), so computing them now
+                    # would be speculative work that the next crossing
+                    # would likely throw away — stop the scan here.
+                    break
+                chosen.append(bb)
+                picked.append((b, s))
+            if not picked:
+                continue
+            if not crossed[b]:
+                man_lanes.extend(picked)
+                continue
+            # Crossed spec: a lane whose farthest target (Manhattan) is
+            # no farther than the nearest blocked cell never reads a
+            # cell the obstacles can shadow (same bound as
+            # `_still_valid`), so its field is still closed-form; only
+            # the rest pay a frontier expansion.
+            ps = np.array([s for _, s in picked])
+            hy, hx = hubs[b, ps, 0], hubs[b, ps, 1]
+            d0 = (np.abs(tgts[b, ps, :, 0] - hy[:, None])
+                  + np.abs(tgts[b, ps, :, 1] - hx[:, None]))
+            d0max = np.where(tmask[b, ps], d0, -1).max(1)
+            by, bx = blk_yx[b]
+            blkmin = (np.abs(by[None, :] - hy[:, None])
+                      + np.abs(bx[None, :] - hx[:, None])).min(1)
+            for k, lane in enumerate(picked):
+                (man_lanes if d0max[k] <= blkmin[k]
+                 else bfs_lanes).append(lane)
+        if schedule is not None:
+            schedule.dispatches.append(man_lanes + bfs_lanes)
+
+        # ---- expand: closed-form fields for still-obstacle-free specs
+        if man_lanes:
+            lb = np.array([b for b, _ in man_lanes])
+            ls = np.array([s for _, s in man_lanes])
+            hy, hx = hubs[lb, ls, 0], hubs[lb, ls, 1]
+            t_y, t_x = tgts[lb, ls, :, 0], tgts[lb, ls, :, 1]
+            tm = tmask[lb, ls]
+            d0 = np.abs(t_y - hy[:, None]) + np.abs(t_x - hx[:, None])
+            wk, wj = np.nonzero(tm)
+            wl_l, wys, wxs = _manhattan_paths(
+                wk, hy[wk], hx[wk], t_y[wk, wj], t_x[wk, wj])
+            per_lane = _group_cells(wl_l, wys * gw + wxs, len(man_lanes))
+            for k, (b, s) in enumerate(man_lanes):
+                dk = d0[k][tm[k]]
+                buffer[(b, s)] = _Buffered(
+                    cells=per_lane[k], wl=int((dk + 1).sum()), ok=True,
+                    d0max=int(dk.max()) if dk.size else -1,
+                    dist=None, hub=(int(hy[k]), int(hx[k])))
+
+        # ---- expand: bucketed frontier wavefronts, early-exit on targets
+        fresh: list[tuple[int, int]] = []
+        if bfs_lanes:
+            lb = np.array([b for b, _ in bfs_lanes])
+            ls = np.array([s for _, s in bfs_lanes])
+            nlan = len(bfs_lanes)
+            karr = np.arange(nlan, dtype=np.int64)
+            occ_l = occ[lb] >= capacity
+            free = canvas_free(occ_l)
+            dist = np.full((nlan, (gh + 2) * stride), INF, np.int32)
+            hy, hx = hubs[lb, ls, 0], hubs[lb, ls, 1]
+            sidx = canvas_index(hy, hx, stride)
+            dist[karr, sidx] = 0
+            t_y, t_x = tgts[lb, ls, :, 0], tgts[lb, ls, :, 1]
+            tm = tmask[lb, ls]
+            tciv = canvas_index(t_y, t_x, stride)
+            tb = occ_l.reshape(nlan, -1)[karr[:, None], t_y * gw + t_x] & tm
+
+            def resolved():
+                res = dist[karr[:, None], tciv] < INF
+                if tb.any():
+                    ndv = dist[karr[:, None, None],
+                               tciv[:, :, None] + offs[None, None, :]]
+                    res = res | (tb & (ndv < INF).any(-1))
+                return (res | ~tm).all(1)
+
+            expand_buckets(free, dist, karr, sidx, stride, resolved)
+
+            dv = dist[karr[:, None], tciv].astype(np.int64)
+            ndv = dist[karr[:, None, None],
+                       tciv[:, :, None] + offs[None, None, :]]
+            nmin = ndv.min(-1).astype(np.int64)
+            d0 = np.where(dv < INF, dv, np.minimum(nmin + 1, INF))
+            run = tm & (d0 < INF)
+            okl = (run | ~tm).all(1)
+            blkt = run & (dv >= INF)
+            esel = np.argmax(ndv == (d0 - 1)[:, :, None], axis=2)
+            entry = tciv + offs[esel]
+            start = np.where(blkt, entry, tciv)
+            dstart = np.where(blkt, d0 - 1, d0)
+            wk, wj = np.nonzero(run & okl[:, None])
+            bw = blkt[wk, wj]
+            sl, sc = _walk_paths(dist, wk, start[wk, wj], dstart[wk, wj],
+                                 stride)
+            lanes_all = np.concatenate([wk, wk[bw], sl])
+            cidx_all = np.concatenate([tciv[wk, wj], entry[wk, wj][bw], sc])
+            cells_all = ((cidx_all // stride - 1) * gw
+                         + (cidx_all % stride - 1))
+            per_lane = _group_cells(lanes_all, cells_all, nlan)
+            for k, (b, s) in enumerate(bfs_lanes):
+                dk = d0[k][run[k]]
+                buffer[(b, s)] = _Buffered(
+                    cells=per_lane[k],
+                    wl=int((dk + 1).sum()) if okl[k] else 0,
+                    ok=bool(okl[k]),
+                    d0max=int(dk.max()) if (okl[k] and dk.size) else -1,
+                    dist=dist[k], hub=None)
+                fresh.append((b, s))
+
+        # ---- commit: strictly in slot order, collision-test on crossings
+        for b in range(bsz):
+            while pend[b] and (b, pend[b][0]) in buffer:
+                s = pend[b].popleft()
+                e = buffer.pop((b, s))
+                if not e.ok:
+                    failed[b] += 1
+                    continue
+                routed[b] += 1
+                wirelen[b] += e.wl
+                uc, cnt = np.unique(e.cells, return_counts=True)
+                pre = occ_flat[b, uc]
+                occ_flat[b, uc] = pre + cnt
+                newly = uc[(pre < capacity) & (pre + cnt >= capacity)]
+                if newly.size:
+                    crossings += 1
+                    crossed[b] = True
+                    ys, xs = newly // gw, newly % gw
+                    blk_yx[b][0] = np.concatenate([blk_yx[b][0], ys])
+                    blk_yx[b][1] = np.concatenate([blk_yx[b][1], xs])
+                    for key in [k for k in buffer if k[0] == b]:
+                        if not _still_valid(buffer[key], ys, xs, stride):
+                            del buffer[key]
+                            collisions += 1
+
+        # Surviving frontier fields are views into this round's batch
+        # array; copy them out so the batch can be freed.
+        for key in fresh:
+            if key in buffer and buffer[key].dist is not None:
+                buffer[key].dist = buffer[key].dist.copy()
+
+    if schedule is not None:
+        schedule.rounds = rounds
+        schedule.collisions = collisions
+        schedule.crossings = crossings
+    return occ, routed, failed, wirelen, rounds, collisions, schedule
+
+
 class BatchedRouting(NamedTuple):
     routed: np.ndarray          # (B,) int32 — successfully routed nets
     failed: np.ndarray          # (B,) int32
     wirelength: np.ndarray      # (B,) int32 — total path points
     occ_count: np.ndarray       # (B, Gh, Gw) int32 congestion map
     grids: np.ndarray           # (B, 2) per-spec (gh, gw)
+    engine: str = "scan"        # "scan" (lax.scan slots) | "concurrent"
+    rounds: int = 0             # wavefront dispatch rounds taken
+    collisions: int = 0         # buffered routes dropped by a crossing
+    schedule: RouteSchedule | None = None
 
     @property
     def success_rate(self) -> np.ndarray:
@@ -369,8 +732,18 @@ class BatchedRouting(NamedTuple):
 
 def batched_route(nets: NetBatch, widths: np.ndarray, heights: np.ndarray,
                   *, coarse: int = 64, capacity: int = 4,
-                  use_kernel: bool | None = None) -> BatchedRouting:
-    """Drive the per-net-slot batched wavefront over all specs.
+                  use_kernel: bool | None = None,
+                  engine: str | None = None,
+                  record_schedule: bool = False) -> BatchedRouting:
+    """Drive the batched wavefront routing over all specs.
+
+    engine: "concurrent" (conflict-aware host scheduler over frontier
+    buckets — the default off-TPU), "scan" (one `lax.scan` wavefront per
+    net slot; the default on TPU, where the Pallas kernel batches the
+    grids, and whenever `use_kernel` forces a device impl), or None for
+    that auto choice.  Both engines produce identical results — the
+    concurrent engine is proven and tested against the scan engine and
+    the sequential router, not an approximation of them.
 
     Cells beyond a spec's own routing grid are pre-blocked, so padding a
     small spec up to the batch-max grid cannot open new paths."""
@@ -382,13 +755,28 @@ def batched_route(nets: NetBatch, widths: np.ndarray, heights: np.ndarray,
     ix = np.arange(gw_max)[None, None, :]
     blocked = ((iy >= grids[:, 0, None, None])
                | (ix >= grids[:, 1, None, None]))
-    occ0 = jnp.asarray(np.where(blocked, capacity, 0).astype(np.int32))
+    occ0_np = np.where(blocked, capacity, 0).astype(np.int32)
+    if engine is None:
+        engine = ("scan" if use_kernel or jax.default_backend() == "tpu"
+                  else "concurrent")
+    if engine == "concurrent":
+        nets_np = NetBatch(*(np.asarray(a) for a in nets))
+        occ, routed, failed, wirelen, rounds, collisions, sched = \
+            _concurrent_route(nets_np, grids, occ0_np, capacity=capacity,
+                              record=record_schedule)
+        occ_np = np.where(blocked, 0, occ).astype(np.int32)
+        return BatchedRouting(routed, failed, wirelen, occ_np, grids,
+                              "concurrent", rounds, collisions, sched)
+    if engine != "scan":
+        raise ValueError(f"engine must be 'scan' or 'concurrent', "
+                         f"got {engine!r}")
     occ, routed, failed, wirelen = _route_program(
-        occ0, nets, capacity=capacity, use_kernel=use_kernel)
+        jnp.asarray(occ0_np), nets, capacity=capacity, use_kernel=use_kernel)
     occ_np = np.asarray(occ)
     occ_np = np.where(blocked, 0, occ_np).astype(np.int32)
     return BatchedRouting(np.asarray(routed), np.asarray(failed),
-                          np.asarray(wirelen), occ_np, grids)
+                          np.asarray(wirelen), occ_np, grids,
+                          "scan", int(nets.nmask.shape[1]), 0, None)
 
 
 # ----------------------------------------------------------------------
@@ -491,7 +879,8 @@ class BatchedLayoutResult:
                        "points": self.metrics_rows()}, f, indent=1)
 
 
-def iter_layout_buckets(buckets, *, use_kernel: bool | None = None):
+def iter_layout_buckets(buckets, *, use_kernel: bool | None = None,
+                        engine: str | None = None):
     """Stream a sequence of layout buckets through the batched flow.
 
     `buckets` is an iterable of `(specs, coarse, capacity)` triples —
@@ -505,11 +894,12 @@ def iter_layout_buckets(buckets, *, use_kernel: bool | None = None):
     """
     for specs, coarse, capacity in buckets:
         yield generate_layouts(specs, coarse=coarse, capacity=capacity,
-                               use_kernel=use_kernel)
+                               use_kernel=use_kernel, engine=engine)
 
 
 def generate_layouts(specs, *, coarse: int = 64, capacity: int = 4,
-                     use_kernel: bool | None = None) -> BatchedLayoutResult:
+                     use_kernel: bool | None = None,
+                     engine: str | None = None) -> BatchedLayoutResult:
     """Lay out a whole (e.g. Pareto-distilled) spec batch at once.
 
     Equivalent per spec to calling `flow.generate_layout` B times, but
@@ -527,7 +917,8 @@ def generate_layouts(specs, *, coarse: int = 64, capacity: int = 4,
     nets = _nets_program(tensors, ops, dims=dims, geom=geom, coarse=coarse)
     routing = batched_route(nets, np.asarray(ops.width),
                             np.asarray(ops.height), coarse=coarse,
-                            capacity=capacity, use_kernel=use_kernel)
+                            capacity=capacity, use_kernel=use_kernel,
+                            engine=engine)
     stats = [nl_mod.stats_for_spec(s) for s in specs]
     return BatchedLayoutResult(
         specs=specs, dims=dims, geom=geom, ops=ops, tensors=tensors,

@@ -103,9 +103,15 @@ def backtrace(dist: np.ndarray, dst: tuple[int, int]):
 
 def route(placement: Placement, nets: list[tuple[str, list[tuple[int, int]]]],
           *, coarse: int = 64, capacity: int = 4,
-          use_kernel: bool | None = None) -> RoutingResult:
+          use_kernel: bool | None = None,
+          impl: str | None = None) -> RoutingResult:
     """Route multi-pin nets (star topology around the first pin) on a
-    coarse grid.  nets: (name, [(x, y) pin coords in F units])."""
+    coarse grid.  nets: (name, [(x, y) pin coords in F units]).
+
+    `impl` passes through to `wavefront_distance` — with both it and
+    `use_kernel` unset, host calls get the frontier-bucketed engine
+    (every impl produces the identical field, so the routing result
+    does not depend on the choice)."""
     gh, gw = grid_shape(placement.width, placement.height, coarse)
     occ_count = np.zeros((gh, gw), np.int16)
     wires: list[Wire] = []
@@ -132,7 +138,8 @@ def route(placement: Placement, nets: list[tuple[str, list[tuple[int, int]]]],
         seed[:] = False
         seed[hub] = True
         dist = np.asarray(wavefront_distance(occ, seed,
-                                             use_kernel=use_kernel))
+                                             use_kernel=use_kernel,
+                                             impl=impl))
         pts: list[tuple[int, int]] = []
         ok = True
         for p in pins[1:]:

@@ -1,4 +1,8 @@
-from repro.kernels.maze_route.ops import INF, wavefront_distance
+from repro.kernels.maze_route.frontier import wavefront_distance_frontier
+from repro.kernels.maze_route.ops import INF, pad_blocked, wavefront_distance
+from repro.kernels.maze_route.oracle import wavefront_distance_bfs
 from repro.kernels.maze_route.ref import wavefront_distance_ref
 
-__all__ = ["INF", "wavefront_distance", "wavefront_distance_ref"]
+__all__ = ["INF", "pad_blocked", "wavefront_distance",
+           "wavefront_distance_bfs", "wavefront_distance_frontier",
+           "wavefront_distance_ref"]

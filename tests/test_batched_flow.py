@@ -8,10 +8,16 @@ import numpy as np
 import pytest
 
 from repro.core.acim_spec import MacroSpec
-from repro.eda import netlist as nl
-from repro.eda.batched_flow import generate_layouts, stack_layout_operands
+from repro.eda import netlist as nl, router
+from repro.eda.batched_flow import (NetBatch, _Buffered, _bbox_overlap,
+                                    _concurrent_route, _nets_program,
+                                    _place_program, _still_valid,
+                                    batched_route, generate_layouts,
+                                    stack_layout_operands)
 from repro.eda.flow import generate_layout
 from repro.eda.placer import BatchDims, geometry
+from repro.kernels.maze_route import wavefront_distance_bfs
+from repro.kernels.maze_route.frontier import canvas_index
 
 # Mixed extents on purpose: every BatchDims axis gets real padding.
 SPECS = (MacroSpec(64, 16, 2, 3), MacroSpec(128, 32, 4, 3),
@@ -104,6 +110,197 @@ class TestBatchedPlacement:
     def test_empty_batch_rejected(self):
         with pytest.raises(ValueError):
             generate_layouts([])
+
+
+# ----------------------------------------------------------------------
+# Conflict-aware concurrent scheduler
+# ----------------------------------------------------------------------
+def _grid_nets(slots, gh, gw):
+    """Build a single-spec NetBatch from (hub, [targets]) grid-cell slots."""
+    n = len(slots)
+    hubs = np.zeros((1, n, 2), np.int32)
+    tgts = np.zeros((1, n, 2, 2), np.int32)
+    tmask = np.zeros((1, n, 2), bool)
+    nmask = np.ones((1, n), bool)
+    for s, (hub, targets) in enumerate(slots):
+        hubs[0, s] = hub
+        for j, t in enumerate(targets):
+            tgts[0, s, j] = t
+            tmask[0, s, j] = True
+        for j in range(len(targets), 2):
+            tgts[0, s, j] = hub
+    return NetBatch(hubs, tgts, tmask, nmask)
+
+
+def _sequential_reference(nets, gh, gw, capacity):
+    """`router.route`'s occupancy evolution on grid-cell nets, slot order.
+
+    Reuses the sequential router's own backtrace (tie-break included) so
+    the comparison is against the real per-net semantics, not a re-model
+    of them."""
+    hubs, tgts, tmask, nmask = (np.asarray(a) for a in nets)
+    occ_count = np.zeros((gh, gw), np.int32)
+    routed = failed = wl = 0
+    for s in range(nmask.shape[1]):
+        if not nmask[0, s]:
+            continue
+        seed = np.zeros((gh, gw), bool)
+        seed[tuple(hubs[0, s])] = True
+        dist = wavefront_distance_bfs(occ_count >= capacity, seed)
+        pts, ok = [], True
+        for j in range(2):
+            if not tmask[0, s, j]:
+                continue
+            path = router.backtrace(dist, tuple(tgts[0, s, j]))
+            if path is None:
+                ok = False
+                break
+            pts.extend(path)
+        if ok:
+            for y, x in pts:
+                occ_count[y, x] += 1
+            routed += 1
+            wl += len(pts)
+        else:
+            failed += 1
+    return routed, failed, wl, occ_count
+
+
+def _run_concurrent(nets, gh, gw, capacity):
+    grids = np.array([[gh, gw]], np.int64)
+    occ0 = np.zeros((1, gh, gw), np.int32)
+    return _concurrent_route(nets, grids, occ0, capacity=capacity,
+                             record=True)
+
+
+@pytest.fixture(scope="module")
+def netbatch():
+    """Real derived nets for SPECS, plus the spec extents."""
+    geom = geometry()
+    dims = BatchDims.for_specs(SPECS)
+    ops = stack_layout_operands(SPECS, geom)
+    tensors = _place_program(ops, dims=dims, geom=geom)
+    nets = _nets_program(tensors, ops, dims=dims, geom=geom, coarse=64)
+    return nets, np.asarray(ops.width), np.asarray(ops.height)
+
+
+class TestConflictScheduler:
+    def test_no_round_codispatches_overlapping_nets(self, netbatch):
+        nets, w, h = netbatch
+        res = batched_route(nets, w, h, engine="concurrent",
+                            record_schedule=True)
+        sched = res.schedule
+        assert sched is not None and sched.rounds == res.rounds
+        assert len(sched.dispatches) == sched.rounds
+        checked = 0
+        for lanes in sched.dispatches:
+            per_spec: dict[int, list] = {}
+            for b, s in lanes:
+                per_spec.setdefault(b, []).append(sched.bboxes[b, s])
+            for boxes in per_spec.values():
+                for i in range(len(boxes)):
+                    for j in range(i + 1, len(boxes)):
+                        assert not _bbox_overlap(boxes[i], boxes[j])
+                        checked += 1
+        assert checked > 0          # the sweep actually batched something
+
+    def test_identical_bbox_nets_serialize(self):
+        # Three nets sharing one corridor: the greedy coloring must put
+        # them in three separate rounds, one commit each, no collisions.
+        slots = [((2, 2), [(2, 6)])] * 3
+        nets = _grid_nets(slots, gh=8, gw=12)
+        occ, routed, failed, wl, rounds, collisions, sched = \
+            _run_concurrent(nets, 8, 12, capacity=100)
+        assert [len(d) for d in sched.dispatches] == [1, 1, 1]
+        assert rounds == 3 and collisions == 0
+        assert int(routed[0]) == 3 and int(failed[0]) == 0
+        assert int(wl[0]) == 3 * 5          # d0 = 4, path = 5 cells each
+        s_routed, s_failed, s_wl, s_occ = \
+            _sequential_reference(nets, 8, 12, capacity=100)
+        assert (int(routed[0]), int(failed[0]), int(wl[0])) \
+            == (s_routed, s_failed, s_wl)
+        np.testing.assert_array_equal(occ[0], s_occ)
+
+    def test_collision_retry_converges_and_matches_sequential(self):
+        # capacity=1: slot 0 (row 0) and slot 1 (row 3) have disjoint
+        # bboxes, so they co-dispatch — but slot 0's commit crosses
+        # capacity at cells whose distance from slot 1's hub undercuts
+        # slot 1's farthest target, so the validity bound must drop and
+        # re-route slot 1 (the collision-retry path).
+        slots = [((0, 0), [(0, 2)]), ((3, 3), [(3, 9)])]
+        nets = _grid_nets(slots, gh=8, gw=12)
+        occ, routed, failed, wl, rounds, collisions, sched = \
+            _run_concurrent(nets, 8, 12, capacity=1)
+        assert len(sched.dispatches[0]) == 2     # co-dispatched round 1
+        assert collisions >= 1                   # ...and slot 1 was dropped
+        assert rounds >= 2                       # retry took another round
+        s_routed, s_failed, s_wl, s_occ = \
+            _sequential_reference(nets, 8, 12, capacity=1)
+        assert (int(routed[0]), int(failed[0]), int(wl[0])) \
+            == (s_routed, s_failed, s_wl)
+        np.testing.assert_array_equal(occ[0], s_occ)
+
+    def test_blocked_corridor_failures_match_sequential(self):
+        # capacity=1 and four nets forced through one 3-cell corridor
+        # mouth: later nets must fail exactly like the sequential router.
+        slots = [((4, 0), [(4, 8)]), ((3, 0), [(3, 8)]),
+                 ((5, 0), [(5, 8)]), ((4, 1), [(4, 7)])]
+        nets = _grid_nets(slots, gh=8, gw=12)
+        occ, routed, failed, wl, _, _, _ = \
+            _run_concurrent(nets, 8, 12, capacity=1)
+        s_routed, s_failed, s_wl, s_occ = \
+            _sequential_reference(nets, 8, 12, capacity=1)
+        assert (int(routed[0]), int(failed[0]), int(wl[0])) \
+            == (s_routed, s_failed, s_wl)
+        np.testing.assert_array_equal(occ[0], s_occ)
+
+    def test_engines_bit_identical(self, netbatch):
+        nets, w, h = netbatch
+        conc = batched_route(nets, w, h, engine="concurrent")
+        scan = batched_route(nets, w, h, engine="scan")
+        assert conc.engine == "concurrent" and scan.engine == "scan"
+        np.testing.assert_array_equal(conc.routed, scan.routed)
+        np.testing.assert_array_equal(conc.failed, scan.failed)
+        np.testing.assert_array_equal(conc.wirelength, scan.wirelength)
+        np.testing.assert_array_equal(conc.occ_count, scan.occ_count)
+
+    def test_unknown_engine_rejected(self, netbatch):
+        nets, w, h = netbatch
+        with pytest.raises(ValueError, match="engine"):
+            batched_route(nets, w, h, engine="astar")
+
+
+class TestStillValidBound:
+    def test_manhattan_entry(self):
+        e = _Buffered(cells=np.zeros(0, np.int64), wl=5, ok=True,
+                      d0max=4, dist=None, hub=(0, 0))
+        far = (np.array([3]), np.array([3]))      # |3|+|3| = 6 >= 4
+        near = (np.array([1]), np.array([2]))     # |1|+|2| = 3 <  4
+        assert _still_valid(e, *far, stride=14)
+        assert not _still_valid(e, *near, stride=14)
+        edge = (np.array([2]), np.array([2]))     # exactly d0max: still ok
+        assert _still_valid(e, *edge, stride=14)
+
+    def test_dist_field_entry(self):
+        gh, gw = 6, 10
+        stride = gw + 2
+        dist = np.full((gh + 2) * stride, 2 ** 29, np.int32)
+        dist[canvas_index(1, 1, stride)] = 2
+        e = _Buffered(cells=np.zeros(0, np.int64), wl=4, ok=True,
+                      d0max=3, dist=dist, hub=None)
+        assert not _still_valid(e, np.array([1]), np.array([1]), stride)
+        e2 = _Buffered(cells=np.zeros(0, np.int64), wl=3, ok=True,
+                       d0max=2, dist=dist, hub=None)
+        assert _still_valid(e2, np.array([1]), np.array([1]), stride)
+
+    def test_failed_and_trivial_entries_always_valid(self):
+        failed = _Buffered(cells=np.zeros(0, np.int64), wl=0, ok=False,
+                           d0max=9, dist=None, hub=(0, 0))
+        trivial = _Buffered(cells=np.zeros(0, np.int64), wl=0, ok=True,
+                            d0max=-1, dist=None, hub=(0, 0))
+        yx = (np.array([0]), np.array([0]))
+        assert _still_valid(failed, *yx, stride=14)
+        assert _still_valid(trivial, *yx, stride=14)
 
 
 class TestDistillAndLayout:

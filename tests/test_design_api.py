@@ -153,6 +153,20 @@ class TestDesignSession:
         assert back.provenance == art.provenance
         assert back.layouts is None   # tensors are not serialized
 
+    def test_route_provenance_columns(self):
+        req = _request(requirements=REQS, layout=True)
+        art = DesignSession().run(req)
+        p = art.provenance
+        # the auto engine choice is recorded: conflict-aware concurrent
+        # scheduler off-TPU, scanned per-slot wavefronts on TPU
+        expected = "scan" if jax.default_backend() == "tpu" else "concurrent"
+        assert p.route_engine == expected
+        assert p.route_rounds > 0 and p.route_collisions >= 0
+        d = art.to_dict()
+        assert d["schema"] == 4
+        for k in ("route_engine", "route_rounds", "route_collisions"):
+            assert k in d["provenance"]
+
 
 class TestDesignService:
     def test_coalesces_concurrent_requests_into_one_dispatch(self):

@@ -264,7 +264,7 @@ class TestArtifactCache:
         cache = ArtifactCache(tmp_path)
         path = cache.put(laid_artifact)
         d = json.loads(path.read_text())
-        assert d["schema"] == 3
+        assert d["schema"] == 4
         d["schema"] = 999
         path.write_text(json.dumps(d))
         assert cache.get(laid_artifact.request) is None
