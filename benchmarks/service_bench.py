@@ -56,11 +56,27 @@ WAL beside the artifact cache; a fresh service over the same cache root
 replays the journal.  Every ticket must resolve across the two phases
 with artifacts equal to the fault-free sequential baseline.
 
+A seventh **bursty** scenario compares fixed coalescing windows with
+the controller-driven adaptive window (`repro.telemetry.control`) on
+bursty arrivals: tenants arrive in `BURST_COUNT` bursts separated by a
+gap, so a narrow fixed window fragments each burst into per-request
+dispatches while a wide one taxes every ticket with held-open latency.
+Recorded per column: wall, ticket p50/p95, dispatched batch count, and
+artifact equality across columns.  The same scenario measures the
+telemetry overhead warn-only (one fixed-window run re-executed with a
+recorder attached) and — with `--telemetry-dir` — dumps the adaptive
+run's span trace (Chrome-trace JSON + per-batch Gantt) and metrics
+snapshot for CI to upload as workflow artifacts.
+
 Compile counts come from the `nsga2.TRACE_COUNTS["run_cell"]` probe and
-the session dispatch counters.  Results land in `BENCH_service.json` at
-the repo root so future PRs have a perf trajectory.
+the session dispatch counters.  Per-ticket percentiles use
+`repro.telemetry.metrics.percentile` — the same quantile math the
+service's latency-histogram summaries report.  Results land in
+`BENCH_service.json` at the repo root so future PRs have a perf
+trajectory.
 
   PYTHONPATH=src python -m benchmarks.service_bench [--smoke] [--out PATH]
+      [--telemetry-dir DIR]
 
 `--smoke` shrinks the request set and MOGA budget for CI.
 """
@@ -77,10 +93,11 @@ import threading
 import time
 
 import jax
-import numpy as np
 
 from repro.api import DesignRequest, DesignSession, Requirements
 from repro.core import nsga2
+from repro.telemetry import (ControllerConfig, Telemetry, atomic_write_json,
+                             percentile, write_metrics_json)
 from repro.runtime.fault_tolerance import (FailureInjector, PreemptionGuard,
                                            StragglerMonitor)
 from repro.serve.design_service import DesignService, PendingTicket
@@ -105,6 +122,16 @@ POOL_SHED_THRESHOLD = 4.0   # loose: CPU contention on few-core hosts
 #   hair-trigger bar would shed every bucket on a 1-core runner
 POOL_SLOW_S, POOL_SLOW_SMOKE_S = 30.0, 6.0   # must clear threshold x EMA
 #   by a margin: full-mode buckets run seconds each
+
+# Bursty-scenario knobs: BURST_COUNT bursts, BURST_GAP_S apart, tenants
+# inside a burst jittered within BURST_JITTER_S.  The fixed columns
+# bracket the design space — a narrow window (fragments bursts) vs a
+# wide one (holds every ticket open); the adaptive column starts at the
+# narrow window and lets the controller ease it from the arrival-rate
+# EMA.  Burst size is the controller's target batch.
+BURST_COUNT, BURST_GAP_S, BURST_JITTER_S = 3, 1.5, 0.1
+BURSTY_NARROW_S, BURSTY_WIDE_S = 0.02, 1.0
+BURSTY_SEEDS = 6
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
@@ -174,6 +201,132 @@ def _async_serve(requests, *, window_s: float, jitter_s: float,
     return artifacts, service, wall, latencies
 
 
+def _burst_requests(smoke: bool) -> list[DesignRequest]:
+    pop, gens = (48, 8) if smoke else (96, 24)
+    return [DesignRequest(array_size=4096, seed=sd, pop_size=pop,
+                          generations=gens, requirements=REQUIREMENTS,
+                          layout=True)
+            for sd in range(BURSTY_SEEDS)]
+
+
+def _bursty_serve(requests, *, window_s: float, controller=None,
+                  telemetry=None, timeout_s: float = 600.0):
+    """Tenant threads arriving in bursts against one serve() pump.
+    Burst k's tenants arrive at ~`k * BURST_GAP_S`; `max_coalesce` is
+    the burst size, so a perfectly-adapted window coalesces each burst
+    into exactly one dispatch without holding it open into the gap."""
+    per_burst = (len(requests) + BURST_COUNT - 1) // BURST_COUNT
+    offsets = [(i // per_burst) * BURST_GAP_S
+               + random.Random(1000 + i).uniform(0.0, BURST_JITTER_S)
+               for i in range(len(requests))]
+    service = DesignService(max_coalesce=per_burst,
+                            coalesce_window_s=window_s,
+                            telemetry=telemetry, controller=controller)
+    artifacts = [None] * len(requests)
+    latencies = [0.0] * len(requests)
+    errors: list[Exception] = []
+    gate = threading.Barrier(len(requests) + 1)
+
+    def tenant(i: int, req: DesignRequest) -> None:
+        try:
+            gate.wait()
+            time.sleep(offsets[i])
+            t0 = time.perf_counter()
+            ticket = service.submit(req)
+            artifacts[i] = service.collect(ticket, timeout=timeout_s)
+            latencies[i] = time.perf_counter() - t0
+        except Exception as e:   # surfaced to the caller below
+            errors.append(e)
+
+    threads = [threading.Thread(target=tenant, args=(i, r))
+               for i, r in enumerate(requests)]
+    for t in threads:
+        t.start()
+    with service.serve():
+        t0 = time.perf_counter()
+        gate.wait()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return artifacts, service, wall, latencies
+
+
+def _bursty_column(arts, service, wall, lat, ref) -> dict:
+    stats = service.stats()
+    return {
+        "wall_s": wall,
+        "ticket_p50_s": float(percentile(lat, 50)),
+        "ticket_p95_s": float(percentile(lat, 95)),
+        "batches": int(stats["service_batches"]),
+        "explorer_dispatches": int(stats["explorer_dispatches"]),
+        "artifacts_equal": (True if ref is None else
+                            all(a.summary() == b.summary()
+                                for a, b in zip(ref, arts))),
+    }
+
+
+def _bursty(smoke: bool, telemetry_dir=None) -> dict:
+    """Adaptive-vs-fixed coalescing on bursty arrivals (plus the
+    telemetry-overhead measurement and the CI trace/metrics dump)."""
+    requests = _burst_requests(smoke)
+    per_burst = (len(requests) + BURST_COUNT - 1) // BURST_COUNT
+    # warm the shapes once so no column pays compilation alone
+    _bursty_serve(requests, window_s=BURSTY_WIDE_S)
+
+    # -- fixed columns (narrow doubles as the artifact reference) ------
+    ref, narrow_svc, narrow_wall, narrow_lat = _bursty_serve(
+        requests, window_s=BURSTY_NARROW_S)
+    wide_arts, wide_svc, wide_wall, wide_lat = _bursty_serve(
+        requests, window_s=BURSTY_WIDE_S)
+    # -- telemetry overhead: same wide config, recorder attached -------
+    _, _, tel_wall, _ = _bursty_serve(
+        requests, window_s=BURSTY_WIDE_S, telemetry=Telemetry())
+    # -- adaptive column -----------------------------------------------
+    atel = Telemetry()
+    cfg = ControllerConfig(min_window_s=BURSTY_NARROW_S,
+                           max_window_s=BURSTY_WIDE_S,
+                           target_batch=per_burst,
+                           min_workers=1, max_workers=1,
+                           hysteresis_ticks=3, tick_interval_s=0.05)
+    ada_arts, ada_svc, ada_wall, ada_lat = _bursty_serve(
+        requests, window_s=BURSTY_NARROW_S, controller=cfg, telemetry=atel)
+
+    if telemetry_dir is not None:
+        d = pathlib.Path(telemetry_dir)
+        d.mkdir(parents=True, exist_ok=True)
+        trace = ada_svc.trace()
+        trace.to_json(d / "service_trace.json")
+        atomic_write_json(trace.gantt(), d / "service_gantt.json")
+        write_metrics_json(ada_svc.metrics(), d / "service_metrics.json")
+
+    return {
+        "n_requests": len(requests),
+        "bursts": BURST_COUNT,
+        "burst_gap_s": BURST_GAP_S,
+        "fixed_narrow": dict(
+            _bursty_column(ref, narrow_svc, narrow_wall, narrow_lat,
+                           None) | {"window_s": BURSTY_NARROW_S}),
+        "fixed_wide": dict(
+            _bursty_column(wide_arts, wide_svc, wide_wall, wide_lat, ref)
+            | {"window_s": BURSTY_WIDE_S}),
+        "adaptive": dict(
+            _bursty_column(ada_arts, ada_svc, ada_wall, ada_lat, ref)
+            | {"window_start_s": BURSTY_NARROW_S,
+               "window_final_s": float(ada_svc.coalesce_window_s),
+               "control_decisions": len(ada_svc.controller.decisions),
+               "window_updates":
+                   int(ada_svc.stats()["control_window_updates"])}),
+        # warn-only: wall-clock cost of an attached recorder on the
+        # identical fixed-wide run (noisy on loaded hosts — a regression
+        # signal, not a gate)
+        "telemetry_overhead_frac":
+            float((tel_wall - wide_wall) / wide_wall),
+        "telemetry_spans": len(atel.recorder),
+    }
+
+
 def _staged(requests, *, pipelined: bool, workers: int = 1,
             injector=None, straggler=None, timeout_s: float = 600.0):
     """The multi-batch pipeline workload: every request is its own batch
@@ -209,8 +362,8 @@ def _pool_injector(smoke: bool) -> FailureInjector:
 def _pool_column(arts, stats, wall, lat, seq) -> dict:
     return {
         "wall_s": wall,
-        "ticket_p50_s": float(np.percentile(lat, 50)),
-        "ticket_p95_s": float(np.percentile(lat, 95)),
+        "ticket_p50_s": float(percentile(lat, 50)),
+        "ticket_p95_s": float(percentile(lat, 95)),
         "layout_dispatches": int(stats["layout_dispatches"]),
         "bucket_retries": int(stats["bucket_retries"]),
         "bucket_failures": int(stats["bucket_failures"]),
@@ -293,7 +446,7 @@ def _timed(fn, *args):
         nsga2.TRACE_COUNTS["run_cell"] - n0
 
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, telemetry_dir=None) -> dict:
     requests = _requests(smoke)
 
     jax.clear_caches()
@@ -336,6 +489,7 @@ def run(smoke: bool = False) -> dict:
         straggler=StragglerMonitor(threshold=POOL_SHED_THRESHOLD))
 
     chaos = _chaos(requests, seq)
+    bursty = _bursty(smoke, telemetry_dir=telemetry_dir)
     return {
         "n_requests": len(requests),
         "requests": [r.to_dict() for r in requests],
@@ -359,8 +513,8 @@ def run(smoke: bool = False) -> dict:
             "window_s": window_s,
             "jitter_s": jitter_s,
             "wall_s": asy_wall,
-            "ticket_p50_s": float(np.percentile(asy_lat, 50)),
-            "ticket_p95_s": float(np.percentile(asy_lat, 95)),
+            "ticket_p50_s": float(percentile(asy_lat, 50)),
+            "ticket_p95_s": float(percentile(asy_lat, 95)),
             "batches": batches,
             "coalescing_factor":
                 int(astats["service_batch_requests"]) / max(batches, 1),
@@ -370,8 +524,8 @@ def run(smoke: bool = False) -> dict:
         "pipelined": {
             "batches": int(pipe_stats["service_batches"]),
             "wall_s": pipe_wall,
-            "ticket_p50_s": float(np.percentile(pipe_lat, 50)),
-            "ticket_p95_s": float(np.percentile(pipe_lat, 95)),
+            "ticket_p50_s": float(percentile(pipe_lat, 50)),
+            "ticket_p95_s": float(percentile(pipe_lat, 95)),
             "stage_busy_s": {k: float(v) for k, v in busy.items()},
             "overlap_s": float(pipe_stats["pipeline_overlap_s"]),
             "overlap_fraction":
@@ -381,18 +535,18 @@ def run(smoke: bool = False) -> dict:
             "serial": {
                 "batches": int(srl_stats["service_batches"]),
                 "wall_s": srl_wall,
-                "ticket_p50_s": float(np.percentile(srl_lat, 50)),
-                "ticket_p95_s": float(np.percentile(srl_lat, 95)),
+                "ticket_p50_s": float(percentile(srl_lat, 50)),
+                "ticket_p95_s": float(percentile(srl_lat, 95)),
                 "artifacts_equal": all(a.summary() == b.summary()
                                        for a, b in zip(seq, srl)),
             },
             "wall_speedup_vs_serial": srl_wall / pipe_wall,
             "p50_ratio_vs_serial":
-                float(np.percentile(pipe_lat, 50)
-                      / np.percentile(srl_lat, 50)),
+                float(percentile(pipe_lat, 50)
+                      / percentile(srl_lat, 50)),
             "p95_ratio_vs_serial":
-                float(np.percentile(pipe_lat, 95)
-                      / np.percentile(srl_lat, 95)),
+                float(percentile(pipe_lat, 95)
+                      / percentile(srl_lat, 95)),
         },
         "layout_pool": {
             "workers": POOL_WORKERS,
@@ -413,6 +567,7 @@ def run(smoke: bool = False) -> dict:
             "faulty_wall_speedup_k4_vs_k1": f1_wall / f4_wall,
         },
         "chaos": chaos,
+        "bursty": bursty,
     }
 
 
@@ -421,8 +576,11 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="small request set / MOGA budget for CI")
     ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_service.json"))
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="dump the adaptive run's span trace, Gantt, and "
+                         "metrics snapshot here (CI uploads these)")
     args = ap.parse_args()
-    result = run(smoke=args.smoke)
+    result = run(smoke=args.smoke, telemetry_dir=args.telemetry_dir)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     for side in ("sequential", "coalesced"):
@@ -453,6 +611,17 @@ def main() -> None:
           f"({lp['faulty_wall_speedup_k4_vs_k1']:.2f}x) "
           f"retries={fi['k4']['bucket_retries']} "
           f"shed={fi['k4']['shed_buckets']}")
+    b = result["bursty"]
+    print(f"bursty: narrow p95={b['fixed_narrow']['ticket_p95_s']:.3f}s "
+          f"({b['fixed_narrow']['batches']} batches) wide "
+          f"p95={b['fixed_wide']['ticket_p95_s']:.3f}s "
+          f"({b['fixed_wide']['batches']} batches) adaptive "
+          f"p95={b['adaptive']['ticket_p95_s']:.3f}s "
+          f"({b['adaptive']['batches']} batches, window "
+          f"{b['adaptive']['window_start_s']:.3f}->"
+          f"{b['adaptive']['window_final_s']:.3f}s) "
+          f"overhead={b['telemetry_overhead_frac']:+.1%} "
+          f"artifacts_equal={b['adaptive']['artifacts_equal']}")
     c = result["chaos"]
     print(f"chaos: drained {c['n_drained']}/{c['n_requests']} then "
           f"journaled {c['n_journaled']}, replayed {c['n_replayed']} "

@@ -15,12 +15,21 @@ A persistent artifact cache backs the session, so re-running this
 script (same `--cache-dir`) serves every tenant from disk with zero
 explorer dispatches — the provenance line flips to `artifact_cache`.
 
+With `--telemetry-dir DIR` the service runs instrumented
+(`docs/observability.md`): it dumps the per-batch stage Gantt as
+Chrome-trace JSON plus a metrics snapshot, both inspectable with
+`tools/repro_ctl.py` (`gantt DIR/service_trace.json --ascii`,
+`metrics DIR/service_metrics.json`).
+
   PYTHONPATH=src python examples/design_service.py [--cache-dir DIR]
+                                                   [--telemetry-dir DIR]
 """
 import argparse
+import pathlib
 
 from repro.api import DesignRequest, DesignSession, Requirements
 from repro.serve.design_service import DesignService
+from repro.telemetry import Telemetry, write_metrics_json
 
 TENANTS = {
     "edge-snr": DesignRequest(
@@ -41,10 +50,15 @@ def main() -> None:
     ap.add_argument("--cache-dir", default=None,
                     help="persistent artifact-cache directory; re-run with "
                          "the same dir to be served from disk")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="dump the stage-span trace and metrics snapshot "
+                         "here (see docs/observability.md)")
     args = ap.parse_args()
 
     session = DesignSession(artifact_cache=args.cache_dir)
-    with DesignService(session, coalesce_window_s=0.25).serve() as svc:
+    telemetry = Telemetry() if args.telemetry_dir else None
+    with DesignService(session, coalesce_window_s=0.25,
+                       telemetry=telemetry).serve() as svc:
         tickets = {name: svc.submit(req) for name, req in TENANTS.items()}
         arts = {name: svc.collect(t, timeout=600)
                 for name, t in tickets.items()}
@@ -78,6 +92,14 @@ def main() -> None:
           f"finalize {busy['finalize']:.3f}s busy, explore∥layout overlap "
           f"{s['pipeline_overlap_s']:.3f}s "
           f"(fraction {s['pipeline_overlap_fraction']:.2f})")
+
+    if args.telemetry_dir:
+        out = pathlib.Path(args.telemetry_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        svc.trace().to_json(out / "service_trace.json")
+        write_metrics_json(svc.metrics(), out / "service_metrics.json")
+        print(f"telemetry: stage Gantt + metrics snapshot -> {out} "
+              f"(inspect with tools/repro_ctl.py)")
 
 
 if __name__ == "__main__":

@@ -55,6 +55,7 @@ modules: `repro.eda.batched_flow` is pure compute.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 import json
@@ -372,16 +373,24 @@ class DesignSession:
     """Long-lived request executor owning the program and front caches,
     optionally backed by a persistent cross-process artifact cache."""
 
-    def __init__(self, *, artifact_cache=None):
+    def __init__(self, *, artifact_cache=None, recorder=None):
         """`artifact_cache` is an `repro.api.artifact_cache.ArtifactCache`
         (or anything with its `get(request)`/`put(artifact)` shape), a
         directory path to open one at, or `None` for in-memory caches
         only.  With a cache, `run`/`run_many` consult it *before*
         exploring — a warm repeat request is served with zero explorer
         dispatches and `provenance.served_from == "artifact_cache"` —
-        and write every successful artifact back after the run."""
+        and write every successful artifact back after the run.
+
+        `recorder` is an optional `repro.telemetry.spans.SpanRecorder`:
+        with one attached, the stage functions record `cat="session"`
+        spans (one per coalesced explore dispatch, distillation, layout
+        bucket, finalize pass) — the sequential drivers' side of the
+        stage Gantt.  A `DesignService` built with telemetry attaches
+        its recorder here automatically."""
         self._programs: dict[tuple, _SweepProgram] = {}
         self._fronts: dict[tuple, ParetoResult] = {}
+        self.recorder = recorder
         self.stats: collections.Counter = collections.Counter()
         # layout() may be driven by several pool workers at once (the
         # service's layout worker pool); Counter increments are
@@ -392,6 +401,14 @@ class DesignSession:
             from repro.api.artifact_cache import ArtifactCache
             artifact_cache = ArtifactCache(artifact_cache)
         self.artifact_cache = artifact_cache
+
+    def _span(self, name: str, **tags):
+        """A `cat="session"` telemetry span, or a no-op without a
+        recorder — the stage functions stay zero-overhead when tracing
+        is off."""
+        if self.recorder is None:
+            return contextlib.nullcontext()
+        return self.recorder.span(name, cat="session", **tags)
 
     # -- program cache ---------------------------------------------------
     def program_for(self, request: DesignRequest) -> _SweepProgram:
@@ -423,13 +440,16 @@ class DesignSession:
             prog = self.program_for(r0)
             n0 = nsga2.TRACE_COUNTS["run_cell"]
             t0 = time.perf_counter()
-            fronts = explore_cells(cells, pop_size=r0.pop_size,
-                                   generations=r0.generations,
-                                   crossover_prob=r0.crossover_prob,
-                                   mutation_prob=r0.mutation_prob, cal=r0.cal,
-                                   use_pallas_dominance=r0.use_pallas_dominance,
-                                   use_pallas_rank=r0.use_pallas_rank,
-                                   program=prog.fn)
+            with self._span("explore_dispatch", cells=len(cells),
+                            coalesced=len(group)):
+                fronts = explore_cells(
+                    cells, pop_size=r0.pop_size,
+                    generations=r0.generations,
+                    crossover_prob=r0.crossover_prob,
+                    mutation_prob=r0.mutation_prob, cal=r0.cal,
+                    use_pallas_dominance=r0.use_pallas_dominance,
+                    use_pallas_rank=r0.use_pallas_rank,
+                    program=prog.fn)
             dt = time.perf_counter() - t0
             traces = nsga2.TRACE_COUNTS["run_cell"] - n0
             prog.dispatches += 1
@@ -562,8 +582,10 @@ class DesignSession:
         `generate_layouts` dispatch chain, independent of every other
         bucket (what lets the pipeline executor stream them)."""
         t0 = time.perf_counter()
-        res = self.layout(bucket.specs, coarse=bucket.coarse,
-                          capacity=bucket.capacity)
+        with self._span("layout_bucket", bucket=bucket.key,
+                        specs=len(bucket.specs)):
+            res = self.layout(bucket.specs, coarse=bucket.coarse,
+                              capacity=bucket.capacity)
         dt = time.perf_counter() - t0
         return BucketResult(bucket=bucket,
                             rows=dict(zip(res.specs, res.metrics_rows())),
@@ -705,10 +727,12 @@ class DesignSession:
         re-stamped `served_from="artifact_cache"`); the remainder runs
         the normal coalesced pipeline and is written back."""
         explored = self.explore_stage(requests)
-        batch = self.distill_stage(explored, strict=strict,
-                                   bucket_layouts=bucket_layouts)
-        return self.finalize_stage(
-            batch, (self.layout_stage(b) for b in batch.buckets))
+        with self._span("distill", requests=len(explored.requests)):
+            batch = self.distill_stage(explored, strict=strict,
+                                       bucket_layouts=bucket_layouts)
+        results = [self.layout_stage(b) for b in batch.buckets]
+        with self._span("finalize", buckets=len(results)):
+            return self.finalize_stage(batch, results)
 
     def run(self, request: DesignRequest) -> DesignArtifact:
         """Execute one request end to end (single-batch layout, so the

@@ -104,6 +104,28 @@ realized coalescing factor, and the fault-tolerance counters
 live pipeline gauges (queue depths, per-stage occupancy and cumulative
 busy time, and the explore/layout overlap clock the benchmark's
 overlap fraction is computed from).
+
+Telemetry & control (`docs/observability.md`): `stats()` is now the
+thin compatibility view over a typed metrics registry —
+`service.metrics()` returns the versioned, scrape-able snapshot
+(`repro.telemetry.metrics.MetricsRegistry`: stats-proxied counters,
+live gauges with open busy clocks flushed, ticket end-to-end latency
+and per-bucket layout-seconds histograms, `served_from` tier and
+fault-family counters), renderable as prometheus text via
+`repro.telemetry.export.render_prometheus`.  With
+`telemetry=Telemetry()` (or `True`), a `SpanRecorder` traces the
+admission pump, every stage-worker unit (the span edges share the
+exact clock reads of the busy clocks), the layout pool, and each
+retry/shed/preemption/replay event — `service.trace()` exports the
+whole run as a Chrome-trace-compatible, schema-stamped event list and
+a per-batch stage Gantt.  With `controller=FeedbackController(...)`
+(or a `ControllerConfig`), the pump additionally runs a feedback tick
+each admission iteration: the arrival-rate EMA eases
+`coalesce_window_s` between the configured bounds, and sustained
+layout backlog / idleness grows or shrinks the layout pool between
+`min_workers`/`max_workers` with hysteresis — every actuation is
+itself a `cat="control"` span, so control behaviour is auditable in
+the same Gantt it shapes.
 """
 from __future__ import annotations
 
@@ -121,8 +143,16 @@ from repro.api.session import DesignArtifact, DesignSession
 from repro.runtime.fault_tolerance import (FailureInjector, PreemptionGuard,
                                            StragglerMonitor, capped_backoff,
                                            run_supervised)
+from repro.telemetry import (ControllerConfig, FeedbackController,
+                             MetricsRegistry, Telemetry, TraceExport)
 
 _STAGES = ("explore", "distill", "layout", "finalize")
+
+# Layout-queue token telling exactly one pool worker to retire (the
+# controller's scale-down path).  Consuming it runs the SAME live-count
+# bookkeeping as the close sentinel, so a shrink racing close() still
+# fires the finalize sentinel exactly once.
+_SHRINK = object()
 
 
 class UnknownTicket(KeyError):
@@ -150,12 +180,13 @@ class _Batch:
     ticket into an `error_artifact`.  All mutated under the service
     lock once the layout pool can see the batch."""
 
-    __slots__ = ("entries", "admitted_at", "explored", "distilled",
+    __slots__ = ("entries", "seq", "admitted_at", "explored", "distilled",
                  "results", "remaining", "waits", "failed", "completed",
                  "shed", "error")
 
-    def __init__(self, entries):
+    def __init__(self, entries, seq: int = -1):
         self.entries = entries          # [(ticket, request, t_submit)]
+        self.seq = seq                  # admission sequence (span tag)
         self.admitted_at = time.monotonic()
         self.explored = None            # ExploredBatch after explore
         self.distilled = None           # DistilledBatch after distill
@@ -181,6 +212,9 @@ class DesignService:
                  guard: PreemptionGuard | None = None,
                  journal: TicketJournal | str | None = None,
                  injector: FailureInjector | None = None,
+                 telemetry: Telemetry | bool | None = None,
+                 controller: (FeedbackController | ControllerConfig
+                              | None) = None,
                  sleep=time.sleep):
         if max_coalesce <= 0:
             raise ValueError("max_coalesce must be positive")
@@ -215,6 +249,35 @@ class DesignService:
         self._injector = injector
         self._sleep = sleep
         self._rng = random.Random(0xAC1)   # jitter; determinism for tests
+        # telemetry: the metrics registry is ALWAYS present (metrics()
+        # must work out of the box); span recording is opt-in — an
+        # unattached recorder costs one `is None` branch per event
+        if telemetry is True:
+            telemetry = Telemetry()
+        self.telemetry = telemetry or None
+        self.recorder = telemetry.recorder if telemetry else None
+        self.registry = (telemetry.metrics if telemetry
+                         else MetricsRegistry())
+        if isinstance(controller, ControllerConfig):
+            controller = FeedbackController(controller,
+                                            recorder=self.recorder)
+        if controller is not None and controller.recorder is None:
+            controller.recorder = self.recorder
+        self.controller = controller
+        if controller is not None:
+            cfg = controller.config
+            if cfg.target_batch is None:
+                controller.config = dataclasses.replace(
+                    cfg, target_batch=max_coalesce)
+            self.layout_workers = max(min(layout_workers,
+                                          cfg.max_workers),
+                                      cfg.min_workers)
+        if (self.recorder is not None
+                and getattr(self.session, "recorder", None) is None):
+            self.session.recorder = self.recorder  # session-level spans too
+        self._arrivals_total = 0     # monotonic submit() count (controller)
+        self._batch_seq = 0          # admission sequence (span tag)
+        self._next_wid = layout_workers   # next grown worker's id
         if journal is None:
             cache = getattr(self.session, "artifact_cache", None)
             if cache is not None and hasattr(cache, "root"):
@@ -262,8 +325,121 @@ class DesignService:
         self._busy_s: collections.Counter = collections.Counter()
         self._overlap_since: float | None = None
         self._overlap_s = 0.0
+        self._register_metrics()
 
     # -- accounting ------------------------------------------------------
+    def _register_metrics(self) -> None:
+        """Wire the typed registry over the live service state.
+
+        Counters that pre-date the registry (the `session.stats` family)
+        are registered as `fn`-proxies over those very keys — one source
+        of truth, `stats()` stays the thin compatibility view.  Gauges
+        sample the pipeline live (open busy clocks flushed, exactly as
+        `stats()` reports them).  The two histograms (`observe()`-driven,
+        not proxied) are the registry's own: ticket end-to-end latency
+        and per-bucket layout seconds."""
+        reg = self.registry
+
+        def stat(key):
+            return lambda: self.session.stats.get(key, 0)
+
+        for key, help_ in (
+                ("explorer_dispatches", "explorer DSE dispatches"),
+                ("layout_dispatches", "layout solver dispatches"),
+                ("run_cell_traces", "cell-level trace evaluations"),
+                ("service_batches", "coalesced batches completed"),
+                ("service_batch_requests", "requests in completed batches"),
+                ("bucket_retries", "layout bucket retry attempts"),
+                ("bucket_failures", "layout buckets failed terminally"),
+                ("bucket_cancellations", "settled-bucket duplicates "
+                                         "cancelled on observe"),
+                ("shed_buckets", "straggler buckets shed to a peer"),
+                ("shed_losses", "shed races lost by the original worker"),
+                ("stage_worker_restarts", "supervised stage-worker "
+                                          "restarts"),
+                ("preemptions", "preemption drains"),
+                ("journaled_tickets", "tickets written to the WAL"),
+                ("control_window_updates", "controller coalescing-window "
+                                           "actuations"),
+                ("pool_scale_ups", "layout pool grow actuations"),
+                ("pool_scale_downs", "layout pool shrink actuations")):
+            reg.counter(f"design_{key}_total", help_, fn=stat(key))
+        for stage in _STAGES:
+            reg.counter("design_stage_retries_total",
+                        "batch-stage retry attempts",
+                        labels={"stage": stage},
+                        fn=stat(f"{stage}_stage_retries"))
+            reg.counter("design_stage_failures_total",
+                        "batch-stage terminal failures",
+                        labels={"stage": stage},
+                        fn=stat(f"{stage}_stage_failures"))
+        for tier in ("artifact_cache", "memo", "explorer", "pipeline",
+                     "journal_replay", "error"):
+            reg.counter("design_tickets_served_total",
+                        "tickets landed, by provenance tier",
+                        labels={"tier": tier})
+
+        def locked(fn):
+            def sample():
+                with self._lock:
+                    return fn()
+            return sample
+
+        reg.gauge("design_queue_depth",
+                  "submissions not yet admitted to a batch",
+                  fn=locked(lambda: len(self._queue)))
+        reg.gauge("design_inflight_batches",
+                  "batches admitted, not yet finalized",
+                  fn=locked(lambda: len(self._inflight)))
+        reg.gauge("design_inflight_buckets",
+                  "buckets running in the layout pool",
+                  fn=locked(lambda: len(self._inflight_buckets)))
+        reg.gauge("design_layout_workers", "live layout pool width",
+                  fn=lambda: self.layout_workers)
+        reg.gauge("design_coalesce_window_s",
+                  "live admission coalescing window",
+                  fn=lambda: self.coalesce_window_s)
+        reg.gauge("design_pump_alive", "serve() pump liveness",
+                  fn=locked(lambda: float(self._pump_alive())))
+        for stage in _STAGES:
+            def depth(s=stage):
+                q = self._queues.get(s)
+                return q.qsize() if q is not None else 0
+            reg.gauge("design_stage_queue_depth", "items waiting per stage",
+                      labels={"stage": stage}, fn=depth)
+            reg.gauge("design_stage_busy", "stage occupancy (workers busy)",
+                      labels={"stage": stage},
+                      fn=locked(lambda s=stage: self._busy_n[s]))
+            reg.gauge("design_stage_busy_seconds",
+                      "cumulative busy time per stage (open clock flushed)",
+                      labels={"stage": stage},
+                      fn=locked(
+                          lambda s=stage: self._busy_snapshot()[0][s]))
+        reg.gauge("design_pipeline_overlap_seconds",
+                  "wall-clock with explore and layout busy simultaneously",
+                  fn=locked(lambda: self._busy_snapshot()[1]))
+        self._ticket_latency = reg.histogram(
+            "design_ticket_latency_seconds",
+            "submit() -> artifact landed, per ticket")
+        self._bucket_seconds = reg.histogram(
+            "design_bucket_layout_seconds",
+            "layout solve wall-clock per bucket attempt")
+
+    def metrics(self) -> dict:
+        """The versioned metrics snapshot (`METRICS_SCHEMA`): every
+        registered counter/gauge/histogram sampled NOW — callbacks read
+        the live pipeline state under the service lock, open busy
+        clocks flushed.  Render with
+        `repro.telemetry.export.render_prometheus`, persist with
+        `write_metrics_json`."""
+        return self.registry.snapshot()
+
+    def trace(self) -> TraceExport | None:
+        """Export the span trace (open spans flushed) — `None` unless
+        the service was built with `telemetry=`."""
+        if self.recorder is None:
+            return None
+        return self.recorder.export()
     def stats(self) -> dict:
         """A point-in-time **snapshot** of counters and pipeline gauges.
 
@@ -289,7 +465,6 @@ class DesignService:
         The snapshot is a `collections.Counter` copy, so counter keys
         that never fired read as 0 instead of raising."""
         with self._lock:
-            now = time.monotonic()
             snap = collections.Counter(self.session.stats)
             snap["queue_depth"] = len(self._queue)
             snap["inflight_batches"] = len(self._inflight)
@@ -304,19 +479,30 @@ class DesignService:
                 s: (self._queues[s].qsize() if s in self._queues else 0)
                 for s in _STAGES}
             snap["stage_busy"] = {s: self._busy_n[s] > 0 for s in _STAGES}
-            busy_s = {s: self._busy_s[s]
-                      + (now - self._busy_since[s]
-                         if s in self._busy_since else 0.0)
-                      for s in _STAGES}
+            busy_s, overlap = self._busy_snapshot()
             snap["stage_busy_s"] = busy_s
-            overlap = self._overlap_s + (now - self._overlap_since
-                                         if self._overlap_since is not None
-                                         else 0.0)
             snap["pipeline_overlap_s"] = overlap
             floor = min(busy_s["explore"], busy_s["layout"])
             snap["pipeline_overlap_fraction"] = (overlap / floor
                                                  if floor > 0 else 0.0)
             return snap
+
+    def _busy_snapshot(self) -> tuple[dict, float]:
+        """Lock held.  Per-stage cumulative busy seconds and the
+        explore∧layout overlap clock, with OPEN clocks flushed at the
+        current time — a mid-batch `stats()` or `metrics()` reports
+        in-progress stage time, never a stale closed total.  The one
+        flushing path shared by the `stats()` compatibility view and
+        the registry gauges."""
+        now = time.monotonic()
+        busy_s = {s: self._busy_s[s]
+                  + (now - self._busy_since[s]
+                     if s in self._busy_since else 0.0)
+                  for s in _STAGES}
+        overlap = self._overlap_s + (now - self._overlap_since
+                                     if self._overlap_since is not None
+                                     else 0.0)
+        return busy_s, overlap
 
     def __len__(self) -> int:
         with self._lock:
@@ -349,6 +535,7 @@ class DesignService:
                 ) from self._pump_error
             ticket = self._next_ticket
             self._next_ticket += 1
+            self._arrivals_total += 1   # controller's rate-EMA source
             self._queue.append((ticket, request, time.monotonic()))
             self._pending.add(ticket)
             self._work.notify_all()
@@ -407,7 +594,7 @@ class DesignService:
                 self._work.notify_all()
             raise
         out = {ticket: artifacts[r] for ticket, r, _ in batch}
-        self._complete(out)
+        self._complete(out, entries=batch)
         return out
 
     def run(self) -> dict[int, DesignArtifact]:
@@ -508,9 +695,12 @@ class DesignService:
                                    else min(remaining, 0.1))
 
     def _complete(self, out: dict[int, DesignArtifact],
-                  batch: _Batch | None = None) -> None:
+                  batch: _Batch | None = None, entries=None) -> None:
         """Land a finished batch's artifacts: journal-replay re-stamp,
-        done/pending bookkeeping, service counters, wakeups."""
+        done/pending bookkeeping, service counters, ticket-latency /
+        served-tier metrics (when `entries` carries the submit stamps),
+        wakeups."""
+        now = time.monotonic()
         with self._lock:
             for t in list(out):
                 if t in self._replayed:
@@ -525,6 +715,19 @@ class DesignService:
             if batch is not None and batch in self._inflight:
                 self._inflight.remove(batch)
             self._done_cv.notify_all()
+        if entries is None and batch is not None:
+            entries = batch.entries
+        for ticket, _, t_submit in entries or ():
+            art = out.get(ticket)
+            if art is None:
+                continue
+            self._ticket_latency.observe(now - t_submit)
+            tier = getattr(art.provenance, "served_from", None)
+            if art.error is not None:
+                tier = "error"
+            if tier:
+                self.registry.counter("design_tickets_served_total",
+                                      labels={"tier": str(tier)}).inc()
 
     # -- preemption + journal replay -------------------------------------
     def replay_journal(self) -> list[int]:
@@ -545,6 +748,9 @@ class DesignService:
         with self._lock:
             self._replayed.update(tickets)
         self.journal.clear()
+        if self.recorder is not None:
+            self.recorder.instant("journal_replay", cat="fault",
+                                  tickets=len(tickets))
         return tickets
 
     def _preempt_drain(self) -> None:
@@ -553,6 +759,8 @@ class DesignService:
         killed, replay still recovers them; drained work is served from
         the artifact cache on replay), stop admitting, and let the
         already-admitted batches run to completion."""
+        drain_span = (None if self.recorder is None
+                      else self.recorder.begin("preempt_drain", cat="fault"))
         with self._lock:
             self._preempted = True
             entries = sorted((e for b in self._inflight for e in b.entries),
@@ -565,6 +773,9 @@ class DesignService:
         with self._lock:
             self.session.stats["journaled_tickets"] += n
             self._done_cv.notify_all()   # waiters re-evaluate (PendingTicket)
+        if drain_span is not None:
+            drain_span.args["journaled"] = n
+            self.recorder.end(drain_span)
 
     # -- the staged pipeline ---------------------------------------------
     def _pump_alive(self) -> bool:
@@ -628,6 +839,7 @@ class DesignService:
                                 "finalize": queue.Queue()}  # retries re-put
                 self._redo = {s: collections.deque() for s in _STAGES}
                 self._layout_live = self.layout_workers
+                self._next_wid = self.layout_workers
                 self._stage_threads = [
                     threading.Thread(target=self._stage_worker,
                                      args=("explore", None),
@@ -668,12 +880,21 @@ class DesignService:
         preemption request is noticed within ~0.1s even on an idle
         queue."""
         pipelined = self._pipelined
-        cap = 0.1 if self._guard is not None else None
+        caps = []
+        if self._guard is not None:
+            caps.append(0.1)
+        if self.controller is not None and pipelined:
+            # bounded waits guarantee a controller tick at least every
+            # tick_interval_s even on an idle queue
+            caps.append(self.controller.config.tick_interval_s)
+        cap = min(caps) if caps else None
         try:
             while True:
                 preempt = False
                 with self._lock:
                     while True:
+                        if pipelined:
+                            self._control_tick()
                         if (self._guard is not None and self._guard.preempted
                                 and not self._preempted):
                             preempt = True
@@ -726,31 +947,53 @@ class DesignService:
             del self._queue[:self.max_coalesce]
             if not entries:
                 return
-            batch = _Batch(entries)
+            batch = _Batch(entries, seq=self._batch_seq)
+            self._batch_seq += 1
             self._inflight.append(batch)
+        if self.recorder is not None:
+            self.recorder.instant(
+                "admit", cat="pump", batch=batch.seq, at=batch.admitted_at,
+                requests=len(entries),
+                oldest_wait_s=round(batch.admitted_at - entries[0][2], 6),
+                window_s=self.coalesce_window_s)
         self._inject("admit")
         # blocking put = backpressure: at most `pipeline_depth` batches
         # queue ahead of the explore stage; never block under the lock
         self._queues["explore"].put(batch)
 
     @contextlib.contextmanager
-    def _stage(self, name: str):
-        """Occupancy bookkeeping around one unit of stage work."""
+    def _stage(self, name: str, *, batch: int | None = None,
+               bucket=None, worker: str | None = None):
+        """Occupancy bookkeeping (and, with a recorder, a `cat="stage"`
+        span) around one unit of stage work.  The span edges share the
+        busy clocks' exact `time.monotonic()` reads, so per-stage span
+        sums and `stage_busy_s` agree to float precision for
+        single-occupant stages — not merely within scheduling jitter."""
+        t0 = time.monotonic()
         with self._lock:
-            self._mark(name, busy=True)
+            self._mark(name, busy=True, now=t0)
+        span = (None if self.recorder is None
+                else self.recorder.begin(name, cat="stage", batch=batch,
+                                         bucket=bucket, worker=worker,
+                                         at=t0))
         try:
             yield
         finally:
+            t1 = time.monotonic()
             with self._lock:
-                self._mark(name, busy=False)
+                self._mark(name, busy=False, now=t1)
+            if span is not None:
+                self.recorder.end(span, at=t1)
 
-    def _mark(self, name: str, *, busy: bool) -> None:
+    def _mark(self, name: str, *, busy: bool,
+              now: float | None = None) -> None:
         # lock held.  Maintains per-stage busy clocks and the
         # explore∧layout overlap clock (the pipelining win is exactly the
         # wall-clock both are busy at once).  Refcounted: the layout pool
         # has K concurrent occupants of one clock — it runs from the
         # first worker going busy to the last going idle.
-        now = time.monotonic()
+        if now is None:
+            now = time.monotonic()
         if busy:
             self._busy_n[name] += 1
             if self._busy_n[name] == 1:
@@ -788,7 +1031,7 @@ class DesignService:
             self._injector_units[stage] += 1
         self._injector.fire(stage, unit)
 
-    def _attempt(self, stage: str, call):
+    def _attempt(self, stage: str, call, batch: int | None = None):
         """Run a batch-granular stage call under the retry budget:
         `(value, None)` on success, `(None, message)` once the budget is
         exhausted.  Backoff between attempts is capped-exponential with
@@ -805,6 +1048,12 @@ class DesignService:
                         self.session.stats[f"{stage}_stage_retries"] += 1
                     else:
                         self.session.stats[f"{stage}_stage_failures"] += 1
+                if self.recorder is not None:
+                    self.recorder.instant(
+                        "stage_retry" if attempt <= self.max_retries
+                        else "stage_failure",
+                        cat="fault", batch=batch, stage=stage,
+                        attempt=attempt, error=repr(e))
                 if attempt <= self.max_retries:
                     self._sleep(capped_backoff(
                         attempt, base_s=self.retry_backoff_s,
@@ -842,7 +1091,10 @@ class DesignService:
             self._fatal(e)
             while True:
                 item = q_in.get()
-                if item is None:
+                if item is None or item is _SHRINK:
+                    # a shrink token retires this sink exactly like the
+                    # close sentinel would: the live count (and with it
+                    # the finalize sentinel) must stay conserved
                     self._propagate_sentinel(stage)
                     return
 
@@ -858,6 +1110,18 @@ class DesignService:
                 item = q_in.get()
             if item is None:
                 self._propagate_sentinel(stage)
+                return
+            if item is _SHRINK:
+                # controller scale-down: exactly one worker retires.
+                # Same bookkeeping as the close sentinel — decrement the
+                # live count, fire the finalize sentinel if we were last
+                # (a shrink token can race close(): whichever of the two
+                # terminal tokens this worker consumes, the other goes
+                # to a peer, and the counts conserve)
+                self._propagate_sentinel(stage)
+                if self.recorder is not None:
+                    self.recorder.instant("pool_shrink", cat="control",
+                                          worker=f"layout-{wid}")
                 return
             if self._pump_error is not None:
                 continue   # skip; close() restores it from _inflight
@@ -897,11 +1161,11 @@ class DesignService:
         batch.waits = {r: wait for _, r, _ in batch.entries}
 
         def call():
-            with self._stage("explore"):
+            with self._stage("explore", batch=batch.seq):
                 return self.session.explore_stage(
                     [r for _, r, _ in batch.entries])
 
-        value, err = self._attempt("explore", call)
+        value, err = self._attempt("explore", call, batch.seq)
         if err is not None:
             batch.error = err
         else:
@@ -912,10 +1176,10 @@ class DesignService:
         q_out = self._queues["layout"]
         if batch.error is None:
             def call():
-                with self._stage("distill"):
+                with self._stage("distill", batch=batch.seq):
                     return self.session.distill_stage(batch.explored,
                                                       strict=False)
-            value, err = self._attempt("distill", call)
+            value, err = self._attempt("distill", call, batch.seq)
             if err is not None:
                 batch.error = err
             else:
@@ -957,7 +1221,8 @@ class DesignService:
                     self._inflight_buckets.pop(wid, None)
                     self.session.stats["shed_losses"] += 1
                     return
-            with self._stage("layout"):
+            with self._stage("layout", batch=batch.seq, bucket=key,
+                             worker=f"layout-{wid}"):
                 res = self.session.layout_stage(bucket)
         except Exception as e:
             done = False
@@ -976,6 +1241,12 @@ class DesignService:
                         f"attempt(s): {e!r}", attempt)
                     batch.remaining -= 1
                     done = batch.remaining == 0
+            if self.recorder is not None:
+                self.recorder.instant(
+                    "bucket_retry" if attempt <= self.max_retries
+                    else "bucket_failure",
+                    cat="fault", batch=batch.seq, bucket=key,
+                    worker=f"layout-{wid}", attempt=attempt, error=repr(e))
             if attempt <= self.max_retries:
                 self._sleep(capped_backoff(
                     attempt, base_s=self.retry_backoff_s,
@@ -987,6 +1258,7 @@ class DesignService:
                 q_out.put(batch)
             return
         dt = time.monotonic() - t0
+        self._bucket_seconds.observe(dt)
         with self._lock:
             self._inflight_buckets.pop(wid, None)
             if key in batch.completed or key in batch.failed:
@@ -1010,21 +1282,78 @@ class DesignService:
     def _process_finalize(self, batch: _Batch) -> None:
         if batch.error is None:
             def call():
-                with self._stage("finalize"):
+                with self._stage("finalize", batch=batch.seq):
                     return self.session.finalize_stage(
                         batch.distilled, batch.results, waits=batch.waits,
                         pipelined=True, failed=batch.failed or None)
-            arts, err = self._attempt("finalize", call)
+            arts, err = self._attempt("finalize", call, batch.seq)
             if err is not None:
                 batch.error = err
         if batch.error is not None:
-            with self._stage("finalize"):
+            with self._stage("finalize", batch=batch.seq):
                 arts = {r: self.session.error_artifact(
                             r, batch.error, pipelined=True,
                             explore_wait_s=batch.waits.get(r, 0.0))
                         for _, r, _ in batch.entries}
         out = {t: arts[r] for t, r, _ in batch.entries}
         self._complete(out, batch)
+
+    # -- feedback control -------------------------------------------------
+    def _control_tick(self) -> None:
+        """Lock held (the admission pump is the single caller).  Feed
+        the controller one observation window and apply its decision:
+        ease `coalesce_window_s`, grow or shrink the layout pool by
+        one.  Gated off while closing / failed — the sentinel chain's
+        token conservation assumes no grow after the distill fan-out,
+        and ticks stop strictly before the pump parks the explore
+        sentinel."""
+        c = self.controller
+        if (c is None or self._closing or self._preempted
+                or self._pump_error is not None
+                or "layout" not in self._queues):
+            return
+        decision = c.tick(
+            queue_depth=len(self._queue),
+            arrivals_total=self._arrivals_total,
+            layout_backlog=self._queues["layout"].qsize(),
+            inflight_buckets=len(self._inflight_buckets),
+            layout_workers=self.layout_workers,
+            window_s=self.coalesce_window_s)
+        if decision is None:
+            return
+        if abs(decision.window_s - self.coalesce_window_s) > 1e-12:
+            self.coalesce_window_s = decision.window_s
+            self.session.stats["control_window_updates"] += 1
+        if decision.workers > self.layout_workers:
+            self._grow_pool()
+        elif decision.workers < self.layout_workers:
+            self._shrink_pool()
+
+    def _grow_pool(self) -> None:
+        # lock held.  A grown worker is a full pool citizen: it joins
+        # the live count (so the close sentinel fan-out stays conserved)
+        # and close() joins it like the founders.
+        wid = self._next_wid
+        self._next_wid += 1
+        self.layout_workers += 1
+        self._layout_live += 1
+        self.session.stats["pool_scale_ups"] += 1
+        t = threading.Thread(target=self._stage_worker,
+                             args=("layout", wid),
+                             name=f"design-service-layout-{wid}",
+                             daemon=True)
+        self._stage_threads.append(t)
+        t.start()
+
+    def _shrink_pool(self) -> None:
+        # lock held — safe only because the layout queue is unbounded.
+        # `layout_workers` drops at ENQUEUE time (so the close fan-out
+        # counts post-shrink workers) while `_layout_live` drops when a
+        # worker actually consumes the token: live workers ==
+        # layout_workers + pending shrink tokens, always.
+        self.layout_workers -= 1
+        self.session.stats["pool_scale_downs"] += 1
+        self._queues["layout"].put(_SHRINK)
 
     # -- straggler shedding ----------------------------------------------
     def _watchdog_loop(self) -> None:
@@ -1049,6 +1378,11 @@ class DesignService:
                         self.session.stats["shed_buckets"] += 1
                         shed.append((batch, bucket, started, attempt))
             for item in shed:        # never put under the lock
+                if self.recorder is not None:
+                    b, bk, started, _ = item
+                    self.recorder.instant(
+                        "shed", cat="fault", batch=b.seq, bucket=bk.key,
+                        stuck_s=round(time.monotonic() - started, 6))
                 self._queues["layout"].put(item)
 
     def close(self) -> None:

@@ -389,6 +389,74 @@ class TestArtifactCacheEviction:
         assert cache.get(v[1].request) is not None
         assert len(cache) == 1
 
+    def test_entry_aged_exactly_ttl_survives(self, tmp_path, laid_artifact,
+                                             monkeypatch):
+        # the TTL bound is strict (`age > ttl_s` evicts): an entry aged
+        # EXACTLY ttl_s is still valid.  Pin the prune's clock so the
+        # boundary is exact, not within-jitter.
+        from repro.api import artifact_cache as ac_mod
+        cache = ArtifactCache(tmp_path, ttl_s=60.0)
+        v = _variants(laid_artifact, 2)
+        at_bound = cache.put(v[0])
+        beyond = cache.put(v[1])
+        t0 = time.time() + 1000.0
+
+        class _FrozenTime:
+            @staticmethod
+            def time():
+                return t0
+        os.utime(at_bound, (t0 - 60.0, t0 - 60.0))       # age == ttl
+        os.utime(beyond, (t0 - 60.0 - 1e-3, t0 - 60.0 - 1e-3))
+        monkeypatch.setattr(ac_mod, "time", _FrozenTime)
+        cache._prune()
+        assert cache.get(v[0].request) is not None        # survives
+        assert cache.get(v[1].request) is None            # past the bound
+        assert cache.stats["ttl_evictions"] == 1
+
+    def test_max_entries_bound_holds_under_concurrent_puts(
+            self, tmp_path, laid_artifact):
+        # max_entries=3 -> every put prunes (cadence max(1, 3//8) == 1);
+        # concurrent putters race their prunes against each other's
+        # unlinks, which must neither raise nor leave the bound broken
+        cache = ArtifactCache(tmp_path, max_entries=3)
+        v = _variants(laid_artifact, 12)
+        errors = []
+
+        def putter(arts):
+            try:
+                for a in arts:
+                    cache.put(a)
+            except Exception as e:     # pragma: no cover - the failure
+                errors.append(e)
+        threads = [threading.Thread(target=putter, args=(v[i::4],))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        cache._prune()
+        assert len(cache) <= 3
+        assert cache.stats["lru_evictions"] >= len(v) - 3
+
+    def test_get_refreshed_mtime_survives_ttl_prune(self, tmp_path,
+                                                    laid_artifact):
+        # a hit refreshes the entry's mtime (os.utime in get), so a
+        # recently-read entry must survive a TTL prune that evicts its
+        # untouched sibling of the same age
+        cache = ArtifactCache(tmp_path, ttl_s=50.0)
+        v = _variants(laid_artifact, 2)
+        touched = cache.put(v[0])
+        untouched = cache.put(v[1])
+        stale = time.time() - 100.0                       # both long expired
+        os.utime(touched, (stale, stale))
+        os.utime(untouched, (stale, stale))
+        assert cache.get(v[0].request) is not None        # refresh mtime
+        cache._prune()
+        assert cache.get(v[0].request) is not None        # read kept it hot
+        assert cache.get(v[1].request) is None
+        assert cache.stats["ttl_evictions"] == 1
+
     def test_knob_validation(self, tmp_path):
         with pytest.raises(ValueError, match="max_entries"):
             ArtifactCache(tmp_path, max_entries=0)
