@@ -1,0 +1,25 @@
+"""House-rules static analysis: trace purity, lock discipline, schema
+drift.  CLI front end: ``tools/repro_lint.py`` (CI gate); rule catalog
+and suppression syntax: ``docs/static_analysis.md``.
+"""
+from repro.analysis.core import (Finding, Module, RULES,
+                                 apply_suppressions, load_tree)
+from repro.analysis import lock_discipline, schema_drift, trace_purity
+
+__all__ = ["Finding", "Module", "RULES", "apply_suppressions",
+           "load_tree", "run_all", "lock_discipline", "schema_drift",
+           "trace_purity"]
+
+
+def run_all(root, modules=None, *, strict=False):
+    """Run every pass over ``root`` and return (kept, suppressed)."""
+    import pathlib
+
+    root = pathlib.Path(root)
+    if modules is None:
+        modules = load_tree(root)
+    findings = []
+    findings.extend(trace_purity.run(modules))
+    findings.extend(lock_discipline.run(modules))
+    findings.extend(schema_drift.run(modules, root=root))
+    return apply_suppressions(findings, modules, strict=strict)

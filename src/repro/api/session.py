@@ -66,6 +66,7 @@ import time
 from typing import Iterable
 
 from repro.core import nsga2
+from repro.runtime.lock_sanitizer import make_lock
 from repro.core.batched_explorer import explore_cells, sweep_program
 from repro.core.explorer import ParetoResult
 from repro.api.request import DesignRequest
@@ -238,7 +239,7 @@ def _atomic_dump(payload: dict, path) -> None:
 # the *calling* session's stats Counter exactly — several sessions in
 # one process share the memo without cross-counting each other.
 GRID_SIG_CACHE_SIZE = 4096
-_GRID_SIG_LOCK = threading.Lock()
+_GRID_SIG_LOCK = make_lock("api.session._GRID_SIG_LOCK")
 _GRID_SIG_MEMO: collections.OrderedDict = collections.OrderedDict()
 
 
@@ -392,15 +393,25 @@ class DesignSession:
         self._fronts: dict[tuple, ParetoResult] = {}
         self.recorder = recorder
         self.stats: collections.Counter = collections.Counter()
-        # layout() may be driven by several pool workers at once (the
-        # service's layout worker pool); Counter increments are
-        # read-modify-write, so the concurrent writers serialize here.
-        # Single-writer stages (explore/distill/finalize) stay lock-free.
-        self.stats_lock = threading.Lock()
+        # Counter increments are read-modify-write and the counters are
+        # written from every service thread (stage workers, the layout
+        # pool, the pump) as well as the session's own stages, so ALL
+        # mutations go through bump() and all snapshots copy under this
+        # lock — a lock-free insert of a new key can otherwise race a
+        # concurrent `Counter(self.stats)` copy mid-iteration.
+        self.stats_lock = make_lock("DesignSession.stats_lock")
         if artifact_cache is not None and not hasattr(artifact_cache, "put"):
             from repro.api.artifact_cache import ArtifactCache
             artifact_cache = ArtifactCache(artifact_cache)
         self.artifact_cache = artifact_cache
+
+    def bump(self, key: str, n: int = 1) -> None:
+        """Increment a stats counter under `stats_lock`.  The single
+        mutation path for `self.stats`: session stages and every
+        service thread serialize here, so increments never lose updates
+        and snapshot copies never see a dict mid-resize."""
+        with self.stats_lock:
+            self.stats[key] += n
 
     def _span(self, name: str, **tags):
         """A `cat="session"` telemetry span, or a no-op without a
@@ -416,9 +427,9 @@ class DesignSession:
         prog = self._programs.get(sig)
         if prog is None:
             prog = self._programs[sig] = _SweepProgram(request)
-            self.stats["program_cache_misses"] += 1
+            self.bump("program_cache_misses")
         else:
-            self.stats["program_cache_hits"] += 1
+            self.bump("program_cache_hits")
         return prog
 
     # -- exploration (coalesced across requests) -------------------------
@@ -431,7 +442,7 @@ class DesignSession:
         pending: dict[tuple, list[DesignRequest]] = {}
         for r in requests:
             if r.explore_key() in self._fronts:
-                self.stats["front_cache_hits"] += 1
+                self.bump("front_cache_hits")
             else:
                 pending.setdefault(r.explore_group(), []).append(r)
         for group in pending.values():
@@ -453,8 +464,8 @@ class DesignSession:
             dt = time.perf_counter() - t0
             traces = nsga2.TRACE_COUNTS["run_cell"] - n0
             prog.dispatches += 1
-            self.stats["explorer_dispatches"] += 1
-            self.stats["run_cell_traces"] += traces
+            self.bump("explorer_dispatches")
+            self.bump("run_cell_traces", traces)
             for cell, front in fronts.items():
                 key = r0.explore_group() + cell
                 self._fronts[key] = front
@@ -480,8 +491,7 @@ class DesignSession:
         `engine` passes through to `eda.batched_flow.batched_route`
         ("concurrent" / "scan" / None for the backend auto choice); the
         choice is recorded in the artifact provenance either way."""
-        with self.stats_lock:
-            self.stats["layout_dispatches"] += 1
+        self.bump("layout_dispatches")
         (res,) = iter_layout_buckets([(tuple(specs), coarse, capacity)],
                                      engine=engine)
         return res
@@ -503,9 +513,9 @@ class DesignSession:
                 t0 = time.perf_counter()
                 hit = self.artifact_cache.get(r)
                 if hit is None:
-                    self.stats["artifact_cache_misses"] += 1
+                    self.bump("artifact_cache_misses")
                     continue
-                self.stats["artifact_cache_hits"] += 1
+                self.bump("artifact_cache_hits")
                 prov = dataclasses.replace(
                     hit.provenance, explore_s=0.0, layout_s=0.0,
                     total_s=time.perf_counter() - t0, new_traces=0,
@@ -677,9 +687,9 @@ class DesignSession:
                                  error=error)
             if self.artifact_cache is not None and art.ok:
                 self.artifact_cache.put(art)
-                self.stats["artifact_cache_writes"] += 1
+                self.bump("artifact_cache_writes")
             out[r] = art
-        self.stats["requests_served"] += len(out)
+        self.bump("requests_served", len(out))
         return out
 
     def error_artifact(self, request: DesignRequest, message: str, *,

@@ -283,6 +283,7 @@ def run_cell(key: Array, space: SpaceOperands, *, statics: EvolveStatics,
     explorer runs it per device under `shard_map`.  Tracing it bumps
     `TRACE_COUNTS["run_cell"]`.
     """
+    # lint: disable=inplace-store -- deliberate trace-count probe on a host dict
     TRACE_COUNTS["run_cell"] += 1
     kinit, kgen = jax.random.split(key)
     genes = init_population_op(kinit, space, statics.pop_size)

@@ -323,7 +323,11 @@ def _route_step(occ_count: Array, hubs: Array, tgts: Array, tmask: Array,
     ix = jnp.arange(gw)[None, None, :]
     seed = ((iy == hubs[:, 0, None, None]) & (ix == hubs[:, 1, None, None])
             & nmask[:, None, None])
-    dist = wavefront_distance(occ, seed, use_kernel=use_kernel)
+    # translate the legacy use_kernel knob here: internal code
+    # never calls the deprecated ops spelling (pytest errors on it)
+    impl = None if use_kernel is None else (
+        "kernel" if use_kernel else "ref")
+    dist = wavefront_distance(occ, seed, impl=impl)
 
     dirf = jax.vmap(_dir_field)(dist)
     trace = jax.vmap(jax.vmap(_trace_one, in_axes=(None, None, 0, 0)))

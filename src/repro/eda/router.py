@@ -19,6 +19,7 @@ identical to this sequential one.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -112,6 +113,13 @@ def route(placement: Placement, nets: list[tuple[str, list[tuple[int, int]]]],
     `use_kernel` unset, host calls get the frontier-bucketed engine
     (every impl produces the identical field, so the routing result
     does not depend on the choice)."""
+    if use_kernel is not None:
+        warnings.warn(
+            "route(use_kernel=...) is deprecated; pass "
+            "impl='kernel'/'ref' (see docs/kernels.md)",
+            DeprecationWarning, stacklevel=2)
+        if impl is None:
+            impl = "kernel" if use_kernel else "ref"
     gh, gw = grid_shape(placement.width, placement.height, coarse)
     occ_count = np.zeros((gh, gw), np.int16)
     wires: list[Wire] = []
@@ -137,9 +145,7 @@ def route(placement: Placement, nets: list[tuple[str, list[tuple[int, int]]]],
         occ = occ_count >= capacity
         seed[:] = False
         seed[hub] = True
-        dist = np.asarray(wavefront_distance(occ, seed,
-                                             use_kernel=use_kernel,
-                                             impl=impl))
+        dist = np.asarray(wavefront_distance(occ, seed, impl=impl))
         pts: list[tuple[int, int]] = []
         ok = True
         for p in pins[1:]:

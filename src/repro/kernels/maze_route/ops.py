@@ -34,6 +34,8 @@ blocks every cell beyond a spec's own grid bounds).
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -87,6 +89,11 @@ def wavefront_distance(occ: jax.Array, seed: jax.Array, *,
     Host impls ("frontier", "bfs") return numpy arrays; traced/"ref"/
     "kernel" return jax arrays.
     """
+    if use_kernel is not None:
+        warnings.warn(
+            "wavefront_distance(use_kernel=...) is deprecated; pass "
+            "impl='kernel'/'ref' (see docs/kernels.md)",
+            DeprecationWarning, stacklevel=2)
     if impl is None:
         if use_kernel is True:
             impl = "kernel"

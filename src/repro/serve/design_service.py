@@ -40,10 +40,14 @@ the stages partition its state — only the explore worker touches the
 program/front caches, only the distill worker forms buckets, only the
 finalize worker writes the artifact cache — and the one stage that
 *does* fan out, layout, calls only `session.layout_stage`, which is
-pure compute plus a locked counter (`session.stats_lock`).  Every
-other `stats` counter key has a single writer stage, or is incremented
-under the service lock.  `run()`/`step()` are refused while a pump is
-active so no second dispatcher can break that partition.
+pure compute plus a locked counter.  Every `stats` counter mutation —
+session stages and service threads alike — goes through
+`session.bump()` under `session.stats_lock`, and snapshots copy under
+the same lock (`repro.analysis.lock_discipline` enforces the
+single-lock discipline statically; `repro.runtime.lock_sanitizer`
+checks acquisition order at runtime).  `run()`/`step()` are refused
+while a pump is active so no second dispatcher can break that
+partition.
 
 Failure semantics (the fault-tolerance contract, `docs/api.md`):
 
@@ -138,6 +142,7 @@ import threading
 import time
 
 from repro.api.artifact_cache import TicketJournal
+from repro.runtime.lock_sanitizer import make_condition, make_lock
 from repro.api.request import DesignRequest
 from repro.api.session import DesignArtifact, DesignSession
 from repro.runtime.fault_tolerance import (FailureInjector, PreemptionGuard,
@@ -285,14 +290,14 @@ class DesignService:
         elif not isinstance(journal, TicketJournal):
             journal = TicketJournal(journal)
         self.journal = journal
-        self._lock = threading.Lock()
-        self._work = threading.Condition(self._lock)   # queue grew / closing
-        self._done_cv = threading.Condition(self._lock)  # artifacts landed
+        self._lock = make_lock("DesignService._lock")
+        self._work = make_condition(self._lock)   # queue grew / closing
+        self._done_cv = make_condition(self._lock)  # artifacts landed
         # serializes session access on the synchronous run()/step() path;
         # the pipelined path instead relies on the stage partition of
         # session state (module docstring) and refuses run()/step() while
         # a pump is active
-        self._dispatch = threading.Lock()
+        self._dispatch = make_lock("DesignService._dispatch")
         self._queue: list[tuple[int, DesignRequest, float]] = []
         self._pending: set[int] = set()   # issued, not yet in `done`
         self._next_ticket = 0
@@ -341,7 +346,10 @@ class DesignService:
         reg = self.registry
 
         def stat(key):
-            return lambda: self.session.stats.get(key, 0)
+            def sample(key=key):
+                with self.session.stats_lock:
+                    return self.session.stats.get(key, 0)
+            return sample
 
         for key, help_ in (
                 ("explorer_dispatches", "explorer DSE dispatches"),
@@ -395,10 +403,10 @@ class DesignService:
                   "buckets running in the layout pool",
                   fn=locked(lambda: len(self._inflight_buckets)))
         reg.gauge("design_layout_workers", "live layout pool width",
-                  fn=lambda: self.layout_workers)
+                  fn=locked(lambda: self.layout_workers))
         reg.gauge("design_coalesce_window_s",
                   "live admission coalescing window",
-                  fn=lambda: self.coalesce_window_s)
+                  fn=locked(lambda: self.coalesce_window_s))
         reg.gauge("design_pump_alive", "serve() pump liveness",
                   fn=locked(lambda: float(self._pump_alive())))
         for stage in _STAGES:
@@ -406,7 +414,7 @@ class DesignService:
                 q = self._queues.get(s)
                 return q.qsize() if q is not None else 0
             reg.gauge("design_stage_queue_depth", "items waiting per stage",
-                      labels={"stage": stage}, fn=depth)
+                      labels={"stage": stage}, fn=locked(depth))
             reg.gauge("design_stage_busy", "stage occupancy (workers busy)",
                       labels={"stage": stage},
                       fn=locked(lambda s=stage: self._busy_n[s]))
@@ -465,7 +473,12 @@ class DesignService:
         The snapshot is a `collections.Counter` copy, so counter keys
         that never fired read as 0 instead of raising."""
         with self._lock:
-            snap = collections.Counter(self.session.stats)
+            # the counters have their own writer lock (stage workers
+            # bump() concurrently); copy under it so a new-key insert
+            # cannot resize the dict mid-iteration.  Order is always
+            # _lock -> stats_lock, matching every bump() under _lock.
+            with self.session.stats_lock:
+                snap = collections.Counter(self.session.stats)
             snap["queue_depth"] = len(self._queue)
             snap["inflight_batches"] = len(self._inflight)
             snap["inflight_buckets"] = len(self._inflight_buckets)
@@ -710,8 +723,8 @@ class DesignService:
                             a.provenance, served_from="journal_replay"))
             self.done.update(out)
             self._pending.difference_update(out)
-            self.session.stats["service_batches"] += 1
-            self.session.stats["service_batch_requests"] += len(out)
+            self.session.bump("service_batches")
+            self.session.bump("service_batch_requests", len(out))
             if batch is not None and batch in self._inflight:
                 self._inflight.remove(batch)
             self._done_cv.notify_all()
@@ -766,12 +779,12 @@ class DesignService:
             entries = sorted((e for b in self._inflight for e in b.entries),
                              key=lambda e: e[0])
             entries += self._queue   # queued-after-inflight, already ordered
-            self.session.stats["preemptions"] += 1
+            self.session.bump("preemptions")
         n = 0
         if self.journal is not None and entries:
             n = self.journal.write([r for _, r, _ in entries])
         with self._lock:
-            self.session.stats["journaled_tickets"] += n
+            self.session.bump("journaled_tickets", n)
             self._done_cv.notify_all()   # waiters re-evaluate (PendingTicket)
         if drain_span is not None:
             drain_span.args["journaled"] = n
@@ -950,12 +963,15 @@ class DesignService:
             batch = _Batch(entries, seq=self._batch_seq)
             self._batch_seq += 1
             self._inflight.append(batch)
+            # snapshot under the lock: the controller retunes the window
+            # from the pump thread
+            window_s = self.coalesce_window_s
         if self.recorder is not None:
             self.recorder.instant(
                 "admit", cat="pump", batch=batch.seq, at=batch.admitted_at,
                 requests=len(entries),
                 oldest_wait_s=round(batch.admitted_at - entries[0][2], 6),
-                window_s=self.coalesce_window_s)
+                window_s=window_s)
         self._inject("admit")
         # blocking put = backpressure: at most `pipeline_depth` batches
         # queue ahead of the explore stage; never block under the lock
@@ -1045,9 +1061,9 @@ class DesignService:
                 last = e
                 with self._lock:
                     if attempt <= self.max_retries:
-                        self.session.stats[f"{stage}_stage_retries"] += 1
+                        self.session.bump(f"{stage}_stage_retries")
                     else:
-                        self.session.stats[f"{stage}_stage_failures"] += 1
+                        self.session.bump(f"{stage}_stage_failures")
                 if self.recorder is not None:
                     self.recorder.instant(
                         "stage_retry" if attempt <= self.max_retries
@@ -1079,7 +1095,7 @@ class DesignService:
 
         def count_restart(n: int) -> None:
             with self._lock:
-                self.session.stats["stage_worker_restarts"] += 1
+                self.session.bump("stage_worker_restarts")
 
         try:
             run_supervised(attempt, max_restarts=self.worker_restarts,
@@ -1123,7 +1139,9 @@ class DesignService:
                     self.recorder.instant("pool_shrink", cat="control",
                                           worker=f"layout-{wid}")
                 return
-            if self._pump_error is not None:
+            with self._lock:
+                failed = self._pump_error is not None
+            if failed:
                 continue   # skip; close() restores it from _inflight
             try:
                 if stage == "explore":
@@ -1146,7 +1164,9 @@ class DesignService:
         if stage == "explore":
             self._queues["distill"].put(None)
         elif stage == "distill":
-            for _ in range(self.layout_workers):   # one per pool worker
+            with self._lock:   # pool width is autoscaled from the pump
+                width = self.layout_workers
+            for _ in range(width):   # one per pool worker
                 self._queues["layout"].put(None)
         elif stage == "layout":
             with self._lock:
@@ -1206,7 +1226,7 @@ class DesignService:
             if key in batch.completed or key in batch.failed:
                 # shed duplicate (or stale retry) of a settled bucket:
                 # cancelled-on-observe before it even dispatched
-                self.session.stats["bucket_cancellations"] += 1
+                self.session.bump("bucket_cancellations")
                 return
             self._inflight_buckets[wid] = (batch, bucket,
                                            time.monotonic(), attempt)
@@ -1219,7 +1239,7 @@ class DesignService:
                     # a shed peer settled it while a slow fault held us:
                     # cancel-on-observe without paying the dispatch
                     self._inflight_buckets.pop(wid, None)
-                    self.session.stats["shed_losses"] += 1
+                    self.session.bump("shed_losses")
                     return
             with self._stage("layout", batch=batch.seq, bucket=key,
                              worker=f"layout-{wid}"):
@@ -1230,12 +1250,12 @@ class DesignService:
                 self._inflight_buckets.pop(wid, None)
                 if key in batch.completed or key in batch.failed:
                     # a shed peer settled it while we were failing
-                    self.session.stats["bucket_cancellations"] += 1
+                    self.session.bump("bucket_cancellations")
                     return
                 if attempt <= self.max_retries:
-                    self.session.stats["bucket_retries"] += 1
+                    self.session.bump("bucket_retries")
                 else:
-                    self.session.stats["bucket_failures"] += 1
+                    self.session.bump("bucket_failures")
                     batch.failed[key] = (
                         f"layout bucket {key} failed after {attempt} "
                         f"attempt(s): {e!r}", attempt)
@@ -1263,7 +1283,7 @@ class DesignService:
             self._inflight_buckets.pop(wid, None)
             if key in batch.completed or key in batch.failed:
                 # first completion won already: we are the shed loser
-                self.session.stats["shed_losses"] += 1
+                self.session.bump("shed_losses")
                 return
             batch.completed.add(key)
             res.queue_wait_s = wait
@@ -1323,7 +1343,7 @@ class DesignService:
             return
         if abs(decision.window_s - self.coalesce_window_s) > 1e-12:
             self.coalesce_window_s = decision.window_s
-            self.session.stats["control_window_updates"] += 1
+            self.session.bump("control_window_updates")
         if decision.workers > self.layout_workers:
             self._grow_pool()
         elif decision.workers < self.layout_workers:
@@ -1337,7 +1357,7 @@ class DesignService:
         self._next_wid += 1
         self.layout_workers += 1
         self._layout_live += 1
-        self.session.stats["pool_scale_ups"] += 1
+        self.session.bump("pool_scale_ups")
         t = threading.Thread(target=self._stage_worker,
                              args=("layout", wid),
                              name=f"design-service-layout-{wid}",
@@ -1352,7 +1372,7 @@ class DesignService:
         # worker actually consumes the token: live workers ==
         # layout_workers + pending shrink tokens, always.
         self.layout_workers -= 1
-        self.session.stats["pool_scale_downs"] += 1
+        self.session.bump("pool_scale_downs")
         self._queues["layout"].put(_SHRINK)
 
     # -- straggler shedding ----------------------------------------------
@@ -1375,7 +1395,7 @@ class DesignService:
                         self._straggler.events.append(
                             ("shed", key, now - started,
                              self._straggler.ema))
-                        self.session.stats["shed_buckets"] += 1
+                        self.session.bump("shed_buckets")
                         shed.append((batch, bucket, started, attempt))
             for item in shed:        # never put under the lock
                 if self.recorder is not None:

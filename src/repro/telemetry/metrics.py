@@ -40,6 +40,8 @@ import math
 import threading
 import time
 
+from repro.runtime.lock_sanitizer import make_lock
+
 # Bump on any change to the snapshot shape.
 METRICS_SCHEMA = 1
 
@@ -155,7 +157,7 @@ class Histogram:
         self._count = 0
         self._samples: collections.deque = collections.deque(
             maxlen=sample_cap)
-        self._lock = threading.Lock()
+        self._lock = make_lock("Histogram._lock")
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -209,7 +211,7 @@ class MetricsRegistry:
     meaning two things is a lying endpoint."""
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = make_lock("MetricsRegistry._lock")
         self._metrics: dict[tuple, object] = {}
 
     def _register(self, cls, name, help_, labels, **kw):

@@ -42,6 +42,8 @@ import json
 import threading
 import time
 
+from repro.runtime.lock_sanitizer import make_lock
+
 # Bump on any change to the exported span/event shape.
 TRACE_SCHEMA = 1
 
@@ -78,7 +80,7 @@ class SpanRecorder:
 
     def __init__(self, *, clock=time.monotonic):
         self._clock = clock
-        self._lock = threading.Lock()
+        self._lock = make_lock("SpanRecorder._lock")
         self.epoch = clock()
         self._spans: list[Span] = []     # finished, in end order
         self._open: dict[int, Span] = {}  # id(span) -> span

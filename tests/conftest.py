@@ -28,6 +28,17 @@ def _abort(item, seconds: float) -> None:
     os._exit(1)
 
 
+@pytest.fixture(autouse=True, scope="session")
+def _lock_order_sanitizer():
+    """With REPRO_LOCK_SANITIZER=1 (the CI sanitizer shard), every
+    lock the threaded stack created via `make_lock` reported its
+    acquisition order; assert the whole suite produced no inversion.
+    A no-op (empty graph) when the gate is off."""
+    yield
+    from repro.runtime.lock_sanitizer import GLOBAL_REGISTRY
+    GLOBAL_REGISTRY.assert_clean()
+
+
 if not _HAVE_PYTEST_TIMEOUT:
     # Minimal stand-in for pytest-timeout's thread method: the threaded
     # pipeline tests mark themselves `@pytest.mark.timeout(N)` because a

@@ -1,0 +1,44 @@
+"""Fixture: every lock-discipline violation family in one class.
+
+* ``count`` is written from the worker-thread root and read from the
+  external (public API) root with no common lock -> unguarded-attr;
+* ``ab()`` acquires ``_a`` then ``_b`` while ``ba()`` acquires ``_b``
+  then ``_a`` -> lock-order inversion;
+* ``reenter()`` re-acquires the non-reentrant ``_lock`` -> lock-reacquire.
+"""
+import threading
+
+
+class BadService:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+        self.count = 0
+        self._worker = None
+
+    def start(self):
+        self._worker = threading.Thread(target=self._loop)
+        self._worker.start()
+
+    def _loop(self):
+        for _ in range(8):
+            self.count += 1          # thread-root write, no lock
+
+    def read(self):
+        return self.count            # external-root read, no lock
+
+    def ab(self):
+        with self._a:
+            with self._b:
+                return id(self)
+
+    def ba(self):
+        with self._b:
+            with self._a:
+                return id(self)
+
+    def reenter(self):
+        with self._lock:
+            with self._lock:
+                return id(self)

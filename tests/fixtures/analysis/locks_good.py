@@ -1,0 +1,37 @@
+"""Fixture: the disciplined version of `locks_bad.py` — every shared
+access holds ``_lock``, and ``_a``/``_b`` nest in one global order.
+The lock-discipline pass must produce zero findings.
+"""
+import threading
+
+
+class GoodService:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+        self.count = 0
+        self._worker = None
+
+    def start(self):
+        self._worker = threading.Thread(target=self._loop)
+        self._worker.start()
+
+    def _loop(self):
+        for _ in range(8):
+            with self._lock:
+                self.count += 1
+
+    def read(self):
+        with self._lock:
+            return self.count
+
+    def ab(self):
+        with self._a:
+            with self._b:
+                return id(self)
+
+    def also_ab(self):
+        with self._a:
+            with self._b:
+                return -id(self)

@@ -1,0 +1,12 @@
+"""Fixture: a `kernels/*/ops.py` dispatcher that violates the host-guard
+contract — parsed under the name ``repro.kernels.fake.ops`` so the
+trace-purity pass applies the ops dispatch rule (docs/kernels.md).
+"""
+from repro.kernels.fake.frontier import sweep_frontier
+from repro.kernels.fake.ref import sweep_ref
+
+
+def dispatch(occ, impl=None):
+    if impl == "frontier":
+        return sweep_frontier(occ)   # host engine, no raising trace check
+    return sweep_ref(occ)

@@ -1,0 +1,20 @@
+"""Fixture: the compliant version of `ops_bad.py` — the host engine call
+sits behind a raising ``if _traced(...)`` fence, satisfying the ops
+dispatch contract.  Parsed as ``repro.kernels.fake.ops``.
+"""
+import jax
+
+from repro.kernels.fake.frontier import sweep_frontier
+from repro.kernels.fake.ref import sweep_ref
+
+
+def _traced(*arrays):
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def dispatch(occ, impl=None):
+    if impl == "frontier":
+        if _traced(occ):
+            raise TypeError("host engine cannot run under a jit trace")
+        return sweep_frontier(occ)
+    return sweep_ref(occ)

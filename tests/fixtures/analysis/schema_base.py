@@ -1,0 +1,18 @@
+"""Fixture: a minimal versioned wire format, parsed by the schema-drift
+tests under the name ``repro.telemetry.spans`` so the `trace` spec
+applies.  `schema_drifted.py` / `schema_bumped.py` are its mutations.
+"""
+TRACE_SCHEMA = 1
+
+
+class TraceExport:
+    def __init__(self, name, spans):
+        self.name = name
+        self.spans = spans
+
+    def to_dict(self):
+        return {"schema": TRACE_SCHEMA, "name": self.name,
+                "spans": list(self.spans)}
+
+    def to_events(self):
+        return [{"ph": "X", "name": self.name}]

@@ -1,0 +1,18 @@
+"""Fixture: `schema_drifted.py` with the version constant bumped — the
+field change is now legitimate, but a manifest still recording version
+1 must be reported as manifest-stale until regenerated.
+"""
+TRACE_SCHEMA = 2
+
+
+class TraceExport:
+    def __init__(self, name, spans):
+        self.name = name
+        self.spans = spans
+
+    def to_dict(self):
+        return {"schema": TRACE_SCHEMA, "name": self.name,
+                "spans": list(self.spans), "host": "localhost"}
+
+    def to_events(self):
+        return [{"ph": "X", "name": self.name}]

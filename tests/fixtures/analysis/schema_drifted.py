@@ -1,0 +1,17 @@
+"""Fixture: `schema_base.py` with a new serialized field (``host``) but
+the *same* version constant — the schema-drift pass must flag it.
+"""
+TRACE_SCHEMA = 1
+
+
+class TraceExport:
+    def __init__(self, name, spans):
+        self.name = name
+        self.spans = spans
+
+    def to_dict(self):
+        return {"schema": TRACE_SCHEMA, "name": self.name,
+                "spans": list(self.spans), "host": "localhost"}
+
+    def to_events(self):
+        return [{"ph": "X", "name": self.name}]

@@ -1,0 +1,27 @@
+"""Fixture: every trace-purity violation family in one jitted region.
+
+Never imported — parsed by `tests/test_analysis.py` and fed to the
+`repro.analysis.trace_purity` pass, which must flag each marked line.
+"""
+import time
+
+import jax
+
+
+@jax.jit
+def step(x):
+    t = time.time()             # host-call: wall clock under a trace
+    print("step", t)            # host-call: console effect
+    for k in {1, 2, 3}:         # set-iteration: unordered trace structure
+        x = x + k
+    return x
+
+
+def fill(buf, x):
+    buf[0] = x                  # inplace-store, reachable from `outer`
+    return buf
+
+
+@jax.jit
+def outer(x):
+    return fill([0], x)[0]

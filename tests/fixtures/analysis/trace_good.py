@@ -1,0 +1,30 @@
+"""Fixture: the clean spellings of everything `trace_bad.py` does wrong.
+
+The trace-purity pass must produce zero findings here: sets are sorted
+before iteration, array stores go through ``.at[].set()``, and the only
+host call sits behind a raising trace guard.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _traced(*arrays):
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+@jax.jit
+def step(x):
+    for k in sorted({1, 2, 3}):      # deterministic iteration order
+        x = x + k
+    return x.at[0].set(jnp.float32(0))
+
+
+def timed_eval(x):
+    """Host path, fenced: statements after the guard are host-only."""
+    if _traced(x):
+        raise TypeError("timed_eval is host-only")
+    t0 = time.time()
+    y = step(x)
+    return y, time.time() - t0

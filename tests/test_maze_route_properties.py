@@ -198,9 +198,9 @@ class TestDispatchContract:
         seed = np.zeros((6, 9), bool)
         seed[3, 1] = True
         oracle = wavefront_distance_bfs(occ, seed)
-        np.testing.assert_array_equal(
-            np.asarray(wavefront_distance(occ, seed, use_kernel=False)),
-            oracle)
-        np.testing.assert_array_equal(
-            np.asarray(wavefront_distance(occ, seed, use_kernel=True)),
-            oracle)
+        with pytest.warns(DeprecationWarning, match="use_kernel"):
+            out_ref = wavefront_distance(occ, seed, use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(out_ref), oracle)
+        with pytest.warns(DeprecationWarning, match="use_kernel"):
+            out_kernel = wavefront_distance(occ, seed, use_kernel=True)
+        np.testing.assert_array_equal(np.asarray(out_kernel), oracle)

@@ -1,0 +1,103 @@
+"""House-rules linter CLI: trace purity, lock discipline, schema drift.
+
+Runs the `repro.analysis` passes over the tree and prints findings as
+``path:line: [rule] message``.  Exit status is the number of kept
+findings, so CI can gate on it directly.
+
+  python tools/repro_lint.py                 # all passes, suppressions honoured
+  python tools/repro_lint.py --strict        # + reasonless/unused suppressions fail
+  python tools/repro_lint.py --pass locks    # one pass family
+  python tools/repro_lint.py --update-manifest   # regenerate schema manifest
+  python tools/repro_lint.py --list-rules    # rule catalog
+
+Suppression syntax (see docs/static_analysis.md):
+
+  x[i] = v   # lint: disable=inplace-store -- trace-time probe, host dict
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import (RULES, apply_suppressions, load_tree,  # noqa: E402
+                            lock_discipline, schema_drift, trace_purity)
+
+PASSES = {
+    "trace": trace_purity.run,
+    "locks": lock_discipline.run,
+    "schema": None,       # needs root; special-cased below
+}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="trace-purity / lock-discipline / schema-drift linter")
+    ap.add_argument("--root", type=pathlib.Path, default=REPO,
+                    help="repo root to scan (default: this checkout)")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail reasonless, unknown-rule, or unused "
+                         "suppressions")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=sorted(PASSES),
+                    help="run only this pass family (repeatable; "
+                         "default: all)")
+    ap.add_argument("--update-manifest", action="store_true",
+                    help="regenerate the committed schema manifest from "
+                         "the live tree and exit")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print findings silenced by lint: disable "
+                         "comments")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        width = max(len(r) for r in RULES)
+        for rule in sorted(RULES):
+            print(f"{rule:<{width}}  {RULES[rule]}")
+        return 0
+
+    root = args.root.resolve()
+    modules = load_tree(root)
+    if not modules:
+        print(f"repro_lint: no modules under {root}/src/repro",
+              file=sys.stderr)
+        return 1
+
+    if args.update_manifest:
+        path = schema_drift.write_manifest(root, modules)
+        print(f"wrote {path.relative_to(root)}")
+        return 0
+
+    wanted = args.passes or sorted(PASSES)
+    findings = []
+    if "trace" in wanted:
+        findings.extend(trace_purity.run(modules))
+    if "locks" in wanted:
+        findings.extend(lock_discipline.run(modules))
+    if "schema" in wanted:
+        findings.extend(schema_drift.run(modules, root=root))
+
+    kept, suppressed = apply_suppressions(findings, modules,
+                                          strict=args.strict)
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    for f in kept:
+        print(f.render())
+    if args.show_suppressed:
+        for f in suppressed:
+            print(f"suppressed: {f.render()}")
+    tail = f"{len(kept)} finding(s)"
+    if suppressed:
+        tail += f", {len(suppressed)} suppressed"
+    print(f"repro_lint: {tail} over {len(modules)} modules"
+          + (" [strict]" if args.strict else ""))
+    return len(kept)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
