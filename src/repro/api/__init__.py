@@ -25,7 +25,9 @@ from repro.api.request import DesignRequest, Requirements
 from repro.api.session import (BucketResult, DesignArtifact, DesignSession,
                                DistilledBatch, ExploredBatch, LayoutBucket,
                                Provenance)
-from repro.api.artifact_cache import ArtifactCache, TicketJournal
+from repro.api.artifact_cache import (ArtifactCache, FileRemoteStore,
+                                      RemoteStore, TicketJournal,
+                                      TieredArtifactCache)
 
 _DEFAULT_SESSION: DesignSession | None = None
 
@@ -40,5 +42,6 @@ def default_session() -> DesignSession:
 
 __all__ = ["DesignRequest", "Requirements", "DesignArtifact",
            "DesignSession", "Provenance", "ArtifactCache",
+           "TieredArtifactCache", "RemoteStore", "FileRemoteStore",
            "TicketJournal", "ExploredBatch", "DistilledBatch",
            "LayoutBucket", "BucketResult", "default_session"]

@@ -183,6 +183,245 @@ class ArtifactCache:
         return f"ArtifactCache(root={str(self.root)!r}, entries={len(self)})"
 
 
+class RemoteStore:
+    """The pluggable L2 backend contract of `TieredArtifactCache`: an
+    object store keyed by string, bytes-valued, with the classic
+    `get`/`put`/`list` shape.  Implementations must make `put` atomic
+    from a reader's point of view (readers see the old object or the
+    new one, never a torn write) — that is the only consistency the
+    tiered cache needs.  `FileRemoteStore` is the filesystem-URI
+    reference implementation; an S3/GCS adapter slots in by
+    implementing these four methods."""
+
+    def get(self, key: str) -> bytes | None:
+        raise NotImplementedError
+
+    def put(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def list(self) -> list[str]:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> bool:
+        raise NotImplementedError
+
+
+class FileRemoteStore(RemoteStore):
+    """`RemoteStore` over a (typically network-shared) directory.
+
+    Accepts a `file://` URI or a plain path.  Objects are files named
+    by their key; `put` goes through temp-file + `os.replace`, the same
+    atomicity contract as L1 entries, so N fleet workers racing on one
+    key all succeed with complete content."""
+
+    def __init__(self, uri) -> None:
+        text = os.fspath(uri)
+        if text.startswith("file://"):
+            text = text[len("file://"):] or "/"
+        self.root = pathlib.Path(text)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    @property
+    def uri(self) -> str:
+        return f"file://{self.root}"
+
+    def _path(self, key: str) -> pathlib.Path:
+        if "/" in key or key in ("", ".", ".."):
+            raise ValueError(f"invalid object key {key!r}")
+        return self.root / key
+
+    def get(self, key: str) -> bytes | None:
+        try:
+            return self._path(key).read_bytes()
+        except (FileNotFoundError, OSError):
+            return None
+
+    def put(self, key: str, data: bytes) -> None:
+        path = self._path(key)
+        fd, tmp = tempfile.mkstemp(dir=str(self.root),
+                                   prefix=path.name + ".", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def list(self) -> list[str]:
+        return sorted(p.name for p in self.root.glob("*.json"))
+
+    def delete(self, key: str) -> bool:
+        try:
+            os.unlink(self._path(key))
+            return True
+        except OSError:
+            return False
+
+    def size_bytes(self) -> int:
+        total = 0
+        for key in self.list():
+            try:
+                total += self._path(key).stat().st_size
+            except OSError:
+                pass
+        return total
+
+    def __repr__(self) -> str:
+        return f"FileRemoteStore(uri={self.uri!r})"
+
+
+class TieredArtifactCache:
+    """Two-tier artifact store for worker fleets: local disk stays the
+    fast L1 (`ArtifactCache`, per worker), a `RemoteStore` becomes the
+    shared L2 every worker reads through and writes back to.
+
+    `get` checks L1 first; on an L1 miss the L2 object is fetched,
+    validated with exactly the L1 guards (schema stamp, embedded
+    request), **promoted** into L1, and served — so the first repeat
+    request on a fresh worker costs one remote fetch and every repeat
+    after that is local.  `put` writes both tiers.  The session stamps
+    which tier served (`provenance.served_from` of
+    "artifact_cache_l1" / "artifact_cache_l2") via `get_with_tier`,
+    and mirrors the per-tier counters kept here (`stats` keys
+    l1_hits/l1_misses/l2_hits/l2_misses/promotions/l2_writes/
+    l2_rejects) into the service metrics registry.
+
+    Duck-compatible with `ArtifactCache` where it matters: `.root`
+    (ticket journal co-location), `get`/`put`/`clear`/`__len__`/
+    `path_for`.  Eviction knobs (`max_entries`/`ttl_s`) apply to L1;
+    the shared L2 is pruned explicitly (`prune`, e.g. via
+    `tools/repro_ctl.py cache --tier l2 prune`) because no single
+    worker owns its lifecycle."""
+
+    def __init__(self, root, remote, *, max_entries: int | None = None,
+                 ttl_s: float | None = None) -> None:
+        self.l1 = ArtifactCache(root, max_entries=max_entries, ttl_s=ttl_s)
+        self.remote = (remote if hasattr(remote, "get")
+                       else FileRemoteStore(remote))
+        self.stats: collections.Counter = collections.Counter()
+
+    @property
+    def root(self) -> pathlib.Path:
+        return self.l1.root
+
+    def path_for(self, request: DesignRequest) -> pathlib.Path:
+        return self.l1.path_for(request)
+
+    @staticmethod
+    def key_for(request: DesignRequest) -> str:
+        return f"{request.sha()}.json"
+
+    def get(self, request: DesignRequest) -> DesignArtifact | None:
+        return self.get_with_tier(request)[0]
+
+    def get_with_tier(self, request: DesignRequest):
+        """(artifact, tier) — tier is "l1", "l2", or None on a miss."""
+        hit = self.l1.get(request)
+        if hit is not None:
+            self.stats["l1_hits"] += 1
+            return hit, "l1"
+        self.stats["l1_misses"] += 1
+        data = self.remote.get(self.key_for(request))
+        if data is None:
+            self.stats["l2_misses"] += 1
+            return None, None
+        art = self._decode(data, request)
+        if art is None:
+            self.stats["l2_misses"] += 1
+            self.stats["l2_rejects"] += 1
+            return None, None
+        self.stats["l2_hits"] += 1
+        self.l1.put(art)            # promotion: next repeat is local
+        self.stats["promotions"] += 1
+        return art, "l2"
+
+    def _decode(self, data: bytes,
+                request: DesignRequest) -> DesignArtifact | None:
+        """Validate an L2 object with the same guards L1 applies: JSON,
+        schema stamp, embedded-request equality (truncated-sha key
+        collisions), parseability.  Any failure is a counted miss."""
+        try:
+            d = json.loads(data)
+        except (UnicodeDecodeError, json.JSONDecodeError):
+            return None
+        if (not isinstance(d, dict)
+                or d.get("schema") != ARTIFACT_SCHEMA
+                or d.get("request") != request.to_dict()):
+            return None
+        try:
+            return DesignArtifact.from_dict(d)
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def put(self, artifact: DesignArtifact) -> pathlib.Path:
+        path = self.l1.put(artifact)
+        self.remote.put(self.key_for(artifact.request),
+                        json.dumps(artifact.to_dict()).encode())
+        self.stats["l2_writes"] += 1
+        return path
+
+    def lengths(self) -> dict:
+        return {"l1": len(self.l1), "l2": len(self.remote.list())}
+
+    def __len__(self) -> int:
+        return len(self.l1)
+
+    def __contains__(self, request: DesignRequest) -> bool:
+        return (request in self.l1
+                or self.key_for(request) in self.remote.list())
+
+    def clear(self, tier: str = "all") -> int:
+        """Drop entries from one tier ("l1"/"l2") or both ("all");
+        returns how many were removed."""
+        n = 0
+        if tier in ("l1", "all"):
+            n += self.l1.clear()
+        if tier in ("l2", "all"):
+            for key in self.remote.list():
+                n += int(self.remote.delete(key))
+        return n
+
+    def prune(self, tier: str = "l1", *, max_entries: int | None = None,
+              ttl_s: float | None = None) -> int:
+        """Explicit eviction pass.  L1 reuses the cache's own policy
+        (`_prune`); L2 applies the given bounds over the store's keys
+        (TTL by file mtime where the store exposes one, LRU by listing
+        order otherwise) — fleet-level maintenance, never automatic."""
+        if tier == "l1":
+            before = len(self.l1)
+            self.l1._prune()
+            return before - len(self.l1)
+        keys = self.remote.list()
+        drop: list[str] = []
+        if ttl_s is not None and hasattr(self.remote, "_path"):
+            now = time.time()
+            aged = []
+            for k in keys:
+                try:
+                    mtime = self.remote._path(k).stat().st_mtime
+                except OSError:
+                    continue
+                aged.append((mtime, k))
+            aged.sort()
+            drop += [k for m, k in aged if now - m > ttl_s]
+            keys = [k for m, k in aged if now - m <= ttl_s]
+        if max_entries is not None and len(keys) > max_entries:
+            drop += keys[:len(keys) - max_entries]
+        removed = sum(int(self.remote.delete(k)) for k in drop)
+        self.stats["l2_evictions"] += removed
+        return removed
+
+    def __repr__(self) -> str:
+        sizes = self.lengths()
+        return (f"TieredArtifactCache(root={str(self.root)!r}, "
+                f"remote={self.remote!r}, l1={sizes['l1']}, "
+                f"l2={sizes['l2']})")
+
+
 class TicketJournal:
     """Write-ahead log of unfinished `DesignRequest`s, for preemption.
 

@@ -67,6 +67,13 @@ class DesignRequest:
     # backend knobs
     use_pallas_dominance: bool = False
     use_pallas_rank: bool = False
+    # island-model mesh exploration (repro.parallel.distributed_explorer):
+    # islands > 1 evolves that many ring-migrating NSGA-II islands per
+    # cell and serves the merged union front; migrate_every is the
+    # generation cadence between elite migrations.  Both shape the
+    # compiled program, so they are part of `shape_signature()`.
+    islands: int = 1
+    migrate_every: int = 20
     # application requirements (agile distillation)
     requirements: Requirements = Requirements()
     # layout options
@@ -83,6 +90,8 @@ class DesignRequest:
             raise ValueError("pop_size and generations must be positive")
         if self.coarse <= 0 or self.capacity <= 0:
             raise ValueError("coarse and capacity must be positive")
+        if self.islands <= 0 or self.migrate_every <= 0:
+            raise ValueError("islands and migrate_every must be positive")
 
     # -- derived keys ---------------------------------------------------
     def shape_signature(self) -> tuple:
@@ -90,7 +99,7 @@ class DesignRequest:
         compiled sweep program."""
         return (self.pop_size, self.generations, self.crossover_prob,
                 self.mutation_prob, self.use_pallas_dominance,
-                self.use_pallas_rank)
+                self.use_pallas_rank, self.islands, self.migrate_every)
 
     def explore_group(self) -> tuple:
         """Requests sharing this can be coalesced into one dispatch."""

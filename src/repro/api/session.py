@@ -83,7 +83,11 @@ from repro.eda.batched_flow import BatchedLayoutResult, iter_layout_buckets
 #    retried_buckets, shed_buckets, worker_id).
 # 4: provenance gained the routing-engine fields (route_engine,
 #    route_rounds, route_collisions).
-ARTIFACT_SCHEMA = 4
+# 5: provenance gained the mesh-exploration fields (mesh_devices,
+#    islands, migration_topology, migration_rounds) and the tiered-
+#    cache `served_from` values ("artifact_cache_l1"/"_l2"); requests
+#    gained the islands/migrate_every genes.
+ARTIFACT_SCHEMA = 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +144,16 @@ class Provenance:
     route_engine: str = ""
     route_rounds: int = 0
     route_collisions: int = 0
+    # mesh-exploration facts (schema 5), dispatch-scoped like the rest:
+    # how many mesh devices the serving explore dispatch ran on (0 for
+    # the single-device vmap engine and for cache-served artifacts),
+    # the island count it evolved, the migration topology ("ring" for
+    # island evolution, "sharded" for mesh-sharded cells, "" off-mesh),
+    # and how many elite migrations fired
+    mesh_devices: int = 0
+    islands: int = 1
+    migration_topology: str = ""
+    migration_rounds: int = 0
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -374,14 +388,24 @@ class DesignSession:
     """Long-lived request executor owning the program and front caches,
     optionally backed by a persistent cross-process artifact cache."""
 
-    def __init__(self, *, artifact_cache=None, recorder=None):
+    def __init__(self, *, artifact_cache=None, recorder=None, mesh=None):
         """`artifact_cache` is an `repro.api.artifact_cache.ArtifactCache`
-        (or anything with its `get(request)`/`put(artifact)` shape), a
+        (or anything with its `get(request)`/`put(artifact)` shape —
+        e.g. a two-tier `TieredArtifactCache`, whose hits are stamped
+        `served_from="artifact_cache_l1"` / `"artifact_cache_l2"`), a
         directory path to open one at, or `None` for in-memory caches
         only.  With a cache, `run`/`run_many` consult it *before*
         exploring — a warm repeat request is served with zero explorer
         dispatches and `provenance.served_from == "artifact_cache"` —
         and write every successful artifact back after the run.
+
+        `mesh` opts the explore stage onto the device-mesh engine
+        (`repro.parallel.distributed_explorer.explore_cells_mesh`): a
+        `jax.sharding.Mesh`, an int device cap for the auto-built 1-D
+        mesh, or `True` for all local devices.  Island requests
+        (`DesignRequest.islands > 1`) use the mesh engine even when
+        `mesh` is None (auto mesh) — fronts are bit-identical for any
+        device count, so the knob is pure throughput.
 
         `recorder` is an optional `repro.telemetry.spans.SpanRecorder`:
         with one attached, the stage functions record `cat="session"`
@@ -404,6 +428,24 @@ class DesignSession:
             from repro.api.artifact_cache import ArtifactCache
             artifact_cache = ArtifactCache(artifact_cache)
         self.artifact_cache = artifact_cache
+        self.mesh = mesh
+        self._resolved_mesh = None
+
+    def _mesh_for_dispatch(self):
+        """The resolved `jax.sharding.Mesh` for mesh dispatches (built
+        lazily so sessions that never touch the mesh engine never
+        inspect devices)."""
+        if self._resolved_mesh is None:
+            from jax.sharding import Mesh
+
+            from repro.parallel import distributed_explorer as dx
+            if isinstance(self.mesh, Mesh):
+                self._resolved_mesh = self.mesh
+            else:
+                cap = (self.mesh if isinstance(self.mesh, int)
+                       and not isinstance(self.mesh, bool) else None)
+                self._resolved_mesh = dx.default_mesh(max_devices=cap)
+        return self._resolved_mesh
 
     def bump(self, key: str, n: int = 1) -> None:
         """Increment a stats counter under `stats_lock`.  The single
@@ -448,22 +490,40 @@ class DesignSession:
         for group in pending.values():
             r0 = group[0]
             cells = list(dict.fromkeys(r.cell for r in group))
-            prog = self.program_for(r0)
+            on_mesh = r0.islands > 1 or self.mesh is not None
             n0 = nsga2.TRACE_COUNTS["run_cell"]
             t0 = time.perf_counter()
-            with self._span("explore_dispatch", cells=len(cells),
-                            coalesced=len(group)):
-                fronts = explore_cells(
-                    cells, pop_size=r0.pop_size,
-                    generations=r0.generations,
-                    crossover_prob=r0.crossover_prob,
-                    mutation_prob=r0.mutation_prob, cal=r0.cal,
-                    use_pallas_dominance=r0.use_pallas_dominance,
-                    use_pallas_rank=r0.use_pallas_rank,
-                    program=prog.fn)
+            facts: dict = {}
+            if on_mesh:
+                from repro.parallel import distributed_explorer as dx
+                mesh = self._mesh_for_dispatch()
+                with self._span("explore_dispatch", cells=len(cells),
+                                coalesced=len(group), engine="mesh",
+                                islands=r0.islands):
+                    fronts, facts = dx.explore_cells_mesh(
+                        cells, mesh=mesh, islands=r0.islands,
+                        migrate_every=r0.migrate_every,
+                        pop_size=r0.pop_size, generations=r0.generations,
+                        crossover_prob=r0.crossover_prob,
+                        mutation_prob=r0.mutation_prob, cal=r0.cal,
+                        use_pallas_dominance=r0.use_pallas_dominance,
+                        use_pallas_rank=r0.use_pallas_rank)
+                self.bump("mesh_dispatches")
+            else:
+                prog = self.program_for(r0)
+                with self._span("explore_dispatch", cells=len(cells),
+                                coalesced=len(group)):
+                    fronts = explore_cells(
+                        cells, pop_size=r0.pop_size,
+                        generations=r0.generations,
+                        crossover_prob=r0.crossover_prob,
+                        mutation_prob=r0.mutation_prob, cal=r0.cal,
+                        use_pallas_dominance=r0.use_pallas_dominance,
+                        use_pallas_rank=r0.use_pallas_rank,
+                        program=prog.fn)
+                prog.dispatches += 1
             dt = time.perf_counter() - t0
             traces = nsga2.TRACE_COUNTS["run_cell"] - n0
-            prog.dispatches += 1
             self.bump("explorer_dispatches")
             self.bump("run_cell_traces", traces)
             for cell, front in fronts.items():
@@ -472,7 +532,7 @@ class DesignSession:
             for r in group:
                 info[r] = {"explore_s": dt / len(group), "new_traces": traces,
                            "dispatches": 1, "cache_hit": False,
-                           "coalesced": len(group)}
+                           "coalesced": len(group), **facts}
         return {r: self._fronts[r.explore_key()] for r in requests}, info
 
     def fronts_for(self, requests: Iterable[DesignRequest]
@@ -509,13 +569,27 @@ class DesignSession:
         all_requests = list(dict.fromkeys(requests))
         served: dict[DesignRequest, DesignArtifact] = {}
         if self.artifact_cache is not None:
+            tiered = hasattr(self.artifact_cache, "get_with_tier")
             for r in all_requests:
                 t0 = time.perf_counter()
-                hit = self.artifact_cache.get(r)
+                if tiered:
+                    hit, tier = self.artifact_cache.get_with_tier(r)
+                else:
+                    hit, tier = self.artifact_cache.get(r), None
                 if hit is None:
                     self.bump("artifact_cache_misses")
+                    if tiered:
+                        self.bump("artifact_cache_l1_misses")
+                        self.bump("artifact_cache_l2_misses")
                     continue
                 self.bump("artifact_cache_hits")
+                source = "artifact_cache"
+                if tier is not None:
+                    source = f"artifact_cache_{tier}"
+                    self.bump(f"artifact_cache_{tier}_hits")
+                    if tier == "l2":
+                        self.bump("artifact_cache_l1_misses")
+                        self.bump("artifact_cache_promotions")
                 prov = dataclasses.replace(
                     hit.provenance, explore_s=0.0, layout_s=0.0,
                     total_s=time.perf_counter() - t0, new_traces=0,
@@ -524,7 +598,9 @@ class DesignSession:
                     explore_wait_s=0.0, layout_wait_s=0.0, pipelined=False,
                     attempts=0, retried_buckets=0, shed_buckets=0,
                     worker_id="", route_engine="", route_rounds=0,
-                    route_collisions=0, served_from="artifact_cache")
+                    route_collisions=0, mesh_devices=0,
+                    migration_topology="", migration_rounds=0,
+                    served_from=source)
                 served[r] = dataclasses.replace(hit, provenance=prov)
         remainder = [r for r in all_requests if r not in served]
         fronts, info = (self._fronts_for(remainder) if remainder
@@ -680,7 +756,11 @@ class DesignSession:
                 route_engine="/".join(sorted({br.engine for br in touched
                                               if br.engine})),
                 route_rounds=sum(br.rounds for br in touched),
-                route_collisions=sum(br.collisions for br in touched))
+                route_collisions=sum(br.collisions for br in touched),
+                mesh_devices=i.get("mesh_devices", 0),
+                islands=i.get("islands", r.islands),
+                migration_topology=i.get("migration_topology", ""),
+                migration_rounds=i.get("migration_rounds", 0))
             art = DesignArtifact(request=r, pareto=batch.distilled[r],
                                  layout_rows=rows_for,
                                  provenance=prov, layouts=layouts,
@@ -688,6 +768,8 @@ class DesignSession:
             if self.artifact_cache is not None and art.ok:
                 self.artifact_cache.put(art)
                 self.bump("artifact_cache_writes")
+                if hasattr(self.artifact_cache, "get_with_tier"):
+                    self.bump("artifact_cache_l2_writes")
             out[r] = art
         self.bump("requests_served", len(out))
         return out

@@ -220,7 +220,7 @@ class DesignService:
                  telemetry: Telemetry | bool | None = None,
                  controller: (FeedbackController | ControllerConfig
                               | None) = None,
-                 sleep=time.sleep):
+                 mesh=None, sleep=time.sleep):
         if max_coalesce <= 0:
             raise ValueError("max_coalesce must be positive")
         if coalesce_window_s < 0:
@@ -231,7 +231,14 @@ class DesignService:
             raise ValueError("layout_workers must be positive")
         if max_retries < 0:
             raise ValueError("max_retries must be >= 0")
-        self.session = session or DesignSession()
+        self.session = session or DesignSession(mesh=mesh)
+        # `mesh` forwards to the session's device-mesh explore engine
+        # (a Mesh, an int device cap, or True for all local devices);
+        # with an explicitly-passed session it overrides that session's
+        # knob only when set, so `DesignService(mesh=8)` and
+        # `DesignService(DesignSession(mesh=my_mesh))` both work
+        if mesh is not None:
+            self.session.mesh = mesh
         self.max_coalesce = max_coalesce
         self.coalesce_window_s = coalesce_window_s
         # bound of the batch-granular explore/distill queues: how many
@@ -353,7 +360,17 @@ class DesignService:
 
         for key, help_ in (
                 ("explorer_dispatches", "explorer DSE dispatches"),
+                ("mesh_dispatches", "device-mesh explorer dispatches"),
                 ("layout_dispatches", "layout solver dispatches"),
+                ("artifact_cache_l1_hits", "tiered-cache L1 (local disk) "
+                                           "hits"),
+                ("artifact_cache_l1_misses", "tiered-cache L1 misses"),
+                ("artifact_cache_l2_hits", "tiered-cache L2 (remote "
+                                           "store) hits"),
+                ("artifact_cache_l2_misses", "tiered-cache L2 misses"),
+                ("artifact_cache_promotions", "L2 hits promoted into L1"),
+                ("artifact_cache_l2_writes", "artifacts written through "
+                                             "to the L2 store"),
                 ("run_cell_traces", "cell-level trace evaluations"),
                 ("service_batches", "coalesced batches completed"),
                 ("service_batch_requests", "requests in completed batches"),
@@ -381,7 +398,8 @@ class DesignService:
                         "batch-stage terminal failures",
                         labels={"stage": stage},
                         fn=stat(f"{stage}_stage_failures"))
-        for tier in ("artifact_cache", "memo", "explorer", "pipeline",
+        for tier in ("artifact_cache", "artifact_cache_l1",
+                     "artifact_cache_l2", "memo", "explorer", "pipeline",
                      "journal_replay", "error"):
             reg.counter("design_tickets_served_total",
                         "tickets landed, by provenance tier",

@@ -8,6 +8,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.api.session import ARTIFACT_SCHEMA
 from repro.api import (DesignArtifact, DesignRequest, DesignSession,
                        Requirements, default_session)
 from repro.core import explorer, nsga2
@@ -163,9 +164,28 @@ class TestDesignSession:
         assert p.route_engine == expected
         assert p.route_rounds > 0 and p.route_collisions >= 0
         d = art.to_dict()
-        assert d["schema"] == 4
+        assert d["schema"] == ARTIFACT_SCHEMA >= 4
         for k in ("route_engine", "route_rounds", "route_collisions"):
             assert k in d["provenance"]
+
+    def test_mesh_provenance_columns(self):
+        req = _request(requirements=REQS, layout=True, islands=2,
+                       migrate_every=5)
+        session = DesignSession()
+        art = session.run(req)
+        p = art.provenance
+        assert p.served_from == "explorer"
+        assert p.islands == 2 and p.migration_topology == "ring"
+        assert p.mesh_devices >= 1 and p.migration_rounds == 1
+        assert session.stats["mesh_dispatches"] == 1
+        d = art.to_dict()
+        for k in ("mesh_devices", "islands", "migration_topology",
+                  "migration_rounds"):
+            assert k in d["provenance"]
+        # islands=1 requests never touch the mesh engine by default
+        plain = session.run(_request(seed=3))
+        assert plain.provenance.migration_topology == ""
+        assert session.stats["mesh_dispatches"] == 1
 
 
 class TestDesignService:

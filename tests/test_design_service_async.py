@@ -15,7 +15,7 @@ import pytest
 
 from repro.api import (ArtifactCache, DesignArtifact, DesignRequest,
                        DesignSession, Requirements)
-from repro.api.session import _grid_sig
+from repro.api.session import ARTIFACT_SCHEMA, _grid_sig
 from repro.serve.design_service import (DesignService, PendingTicket,
                                         UnknownTicket)
 
@@ -264,7 +264,7 @@ class TestArtifactCache:
         cache = ArtifactCache(tmp_path)
         path = cache.put(laid_artifact)
         d = json.loads(path.read_text())
-        assert d["schema"] == 4
+        assert d["schema"] == ARTIFACT_SCHEMA
         d["schema"] = 999
         path.write_text(json.dumps(d))
         assert cache.get(laid_artifact.request) is None
@@ -526,3 +526,43 @@ def test_cross_process_cache_roundtrip(tmp_path):
     assert report["served_from"] == "artifact_cache"
     # tuples became JSON lists on the wire; compare in JSON space
     assert report["summary"] == json.loads(json.dumps(art.summary()))
+
+
+@pytest.mark.slow
+def test_cross_process_l2_sharing(tmp_path):
+    """Two fleet workers (separate processes) with private L1s and one
+    shared remote tier: the second worker serves the first worker's
+    artifact with zero explorer dispatches, `served_from ==
+    "artifact_cache_l2"`, and promotes it into its own L1."""
+    remote = f"file://{tmp_path}/shared-l2"
+    req = _request(requirements=REQS, layout=True, islands=2,
+                   migrate_every=5)
+
+    def worker(name):
+        r = subprocess.run(
+            [sys.executable,
+             str(REPO / "tests" / "cache_roundtrip_helper.py"),
+             str(tmp_path / name), req.to_json(), "--remote", remote],
+            capture_output=True, text=True, timeout=600,
+            env={**os.environ, "PYTHONPATH": str(REPO / "src"),
+                 "JAX_PLATFORMS": "cpu"})
+        assert r.returncode == 0, r.stderr[-3000:]
+        return json.loads(r.stdout)
+
+    first = worker("w1")
+    assert first["ok"] and first["explorer_dispatches"] == 1
+    assert first["served_from"] == "explorer"
+    assert first["tier_stats"]["artifact_cache_l2_writes"] == 1
+    assert first["mesh"]["islands"] == 2
+    assert first["mesh"]["migration_topology"] == "ring"
+
+    second = worker("w2")
+    assert second["ok"]
+    assert second["explorer_dispatches"] == 0
+    assert second["layout_dispatches"] == 0
+    assert second["served_from"] == "artifact_cache_l2"
+    assert second["tier_stats"]["artifact_cache_l2_hits"] == 1
+    assert second["tier_stats"]["artifact_cache_promotions"] == 1
+    assert second["summary"] == first["summary"]
+    # the promoted copy lives in w2's L1 now
+    assert any((tmp_path / "w2").glob("*.json"))

@@ -16,7 +16,12 @@ Four command families over the file-shaped telemetry surface
     entry count / size / hit counters, an explicit eviction pass with
     operator-supplied bounds (`--ttl-s`, `--max-entries`), a full
     clear, and a warm pass that runs a service over a requests file so
-    a fresh fleet boots hot.
+    a fresh fleet boots hot.  With `--remote URI` the same actions run
+    over the two-tier fleet cache (`TieredArtifactCache`): `stats`
+    reports per-tier entry counts/sizes plus the tier counters
+    (hits/misses/promotions), and `--tier l1|l2|all` filters what
+    `prune`/`clear` touch — the shared L2 has no owning worker, so its
+    eviction is exactly this explicit operator pass.
   * `drain REQUESTS_FILE` — run a telemetry-instrumented service over
     a JSON file of `DesignRequest.to_dict()` entries until every
     ticket lands, then dump the span trace, the per-batch Gantt, and
@@ -117,15 +122,47 @@ def cmd_gantt(args) -> int:
 
 # -- cache -----------------------------------------------------------------
 
+def _dir_stats(root: pathlib.Path) -> tuple[int, int]:
+    entries = sorted(root.glob("*.json"))
+    return len(entries), sum(p.stat().st_size for p in entries)
+
+
 def cmd_cache(args) -> int:
-    from repro.api import ArtifactCache
+    from repro.api import ArtifactCache, TieredArtifactCache
     root = pathlib.Path(args.root)
+    tiered = args.remote is not None
     if args.action == "stats":
-        entries = sorted(root.glob("*.json"))
-        size = sum(p.stat().st_size for p in entries)
-        print(f"{root}: {len(entries)} entries, {size / 1e6:.2f} MB")
+        n1, b1 = _dir_stats(root)
+        if not tiered:
+            print(f"{root}: {n1} entries, {b1 / 1e6:.2f} MB")
+            return 0
+        cache = TieredArtifactCache(root, args.remote)
+        n2 = len(cache.remote.list())
+        b2 = cache.remote.size_bytes()
+        print(f"l1 {root}: {n1} entries, {b1 / 1e6:.2f} MB")
+        print(f"l2 {cache.remote.uri}: {n2} entries, {b2 / 1e6:.2f} MB")
+        # lifetime counters live in session metrics exports; a fresh CLI
+        # cache object only sees this invocation's traffic
+        for k in ("l1_hits", "l1_misses", "l2_hits", "l2_misses",
+                  "promotions", "l2_writes", "l2_rejects", "l2_evictions"):
+            print(f"  {k} = {cache.stats[k]}")
         return 0
     if args.action == "prune":
+        if tiered:
+            cache = TieredArtifactCache(root, args.remote,
+                                        max_entries=args.max_entries,
+                                        ttl_s=args.ttl_s)
+            removed = 0
+            for tier in (("l1", "l2") if args.tier == "all"
+                         else (args.tier,)):
+                removed += cache.prune(tier=tier,
+                                       max_entries=args.max_entries,
+                                       ttl_s=args.ttl_s)
+            sizes = cache.lengths()
+            print(f"pruned {removed} entries (tier={args.tier}); now "
+                  f"l1={sizes['l1']} l2={sizes['l2']} "
+                  f"(l2 evictions {cache.stats['l2_evictions']})")
+            return 0
         cache = ArtifactCache(root, max_entries=args.max_entries,
                               ttl_s=args.ttl_s)
         before = len(cache)
@@ -135,6 +172,11 @@ def cmd_cache(args) -> int:
               f"lru evictions {cache.stats['lru_evictions']})")
         return 0
     if args.action == "clear":
+        if tiered:
+            cache = TieredArtifactCache(root, args.remote)
+            n = cache.clear(tier=args.tier)
+            print(f"cleared {n} entries (tier={args.tier})")
+            return 0
         n = 0
         for p in root.glob("*.json"):
             p.unlink()
@@ -145,7 +187,8 @@ def cmd_cache(args) -> int:
     from repro.api import DesignSession
     from repro.serve.design_service import DesignService
     reqs = _load_requests(args.requests)
-    svc = DesignService(DesignSession(artifact_cache=root),
+    store = (TieredArtifactCache(root, args.remote) if tiered else root)
+    svc = DesignService(DesignSession(artifact_cache=store),
                         max_coalesce=len(reqs))
     tickets = [svc.submit(r) for r in reqs]
     done = svc.run()
@@ -228,8 +271,13 @@ def main(argv=None) -> int:
     g.set_defaults(fn=cmd_gantt)
 
     c = sub.add_parser("cache", help="artifact-cache maintenance")
-    c.add_argument("root")
+    c.add_argument("root", help="L1 cache directory")
     c.add_argument("action", choices=("stats", "prune", "clear", "warm"))
+    c.add_argument("--remote", default=None,
+                   help="shared L2 URI (file://... or path): operate on "
+                        "the two-tier fleet cache")
+    c.add_argument("--tier", choices=("l1", "l2", "all"), default="all",
+                   help="which tier prune/clear touch (with --remote)")
     c.add_argument("--ttl-s", type=float, default=None)
     c.add_argument("--max-entries", type=int, default=None)
     c.add_argument("--requests", default=None,
